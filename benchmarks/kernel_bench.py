@@ -1,0 +1,48 @@
+"""Microbenchmarks of the row-wise primitives on this host (XLA path;
+the Pallas path targets TPU and is validated in interpret mode)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def _bench(fn, *args, iters=10):
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def kernel_suite(emit):
+    key = jax.random.PRNGKey(0)
+    cases = [("matmul_512", (512, 512, 512)),
+             ("matmul_1k", (1024, 1024, 1024)),
+             ("matmul_fc96", (3136, 96, 384))]
+    for name, (m, k, n) in cases:
+        x = jax.random.normal(key, (m, k), jnp.float32)
+        w = jax.random.normal(key, (k, n), jnp.float32)
+        f = jax.jit(lambda a, b: ops.matmul(a, b, impl="ref"))
+        us = _bench(f, x, w)
+        emit(f"kernel.{name}", us,
+             f"{2 * m * k * n / (us * 1e-6) / 1e9:.1f} GFLOP/s")
+
+    q = jax.random.normal(key, (1, 8, 512, 64), jnp.float32)
+    kk = jax.random.normal(key, (1, 2, 512, 64), jnp.float32)
+    f = jax.jit(lambda a, b: ops.attention(a, b, b, causal=True,
+                                           impl="ref"))
+    us = _bench(f, q, kk)
+    flops = 4 * 8 * 512 * 512 * 64 / 2
+    emit("kernel.attention_512_gqa", us,
+         f"{flops / (us * 1e-6) / 1e9:.1f} GFLOP/s")
+
+    x = jax.random.normal(key, (4096, 1024), jnp.float32)
+    g = jnp.ones((1024,), jnp.float32)
+    f = jax.jit(lambda a, b: ops.layernorm(a, b, kind="rms", impl="ref"))
+    us = _bench(f, x, g)
+    emit("kernel.rmsnorm_4kx1k", us,
+         f"{x.size * 4 * 2 / (us * 1e-6) / 1e9:.1f} GB/s")

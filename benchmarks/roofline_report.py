@@ -1,0 +1,60 @@
+"""Aggregate dry-run artifacts into the §Roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_cells(dryrun_dir: str):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        tag = os.path.basename(path)[:-5]
+        parts = tag.split("__")
+        d["_tag"] = tag
+        if len(parts) == 3:
+            d.setdefault("arch", parts[0])
+            d.setdefault("shape", parts[1])
+            d.setdefault("mesh", parts[2])
+        cells.append(d)
+    return cells
+
+
+def markdown_table(cells, mesh_filter: str = "pod") -> str:
+    rows = ["| arch | shape | compute (ms) | memory raw/fused (ms) | "
+            "collective (ms) | bound | useful | MFU | live GB/dev |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for d in cells:
+        if d.get("skipped"):
+            rows.append(f"| {d.get('arch','?')} | {d.get('shape','?')} | "
+                        f"SKIP ({d.get('reason','')}) | | | | | | |")
+            continue
+        if not d.get("ok") or mesh_filter not in str(d.get("mesh", "")):
+            continue
+        rows.append(
+            f"| {d['arch']} | {d['shape']} "
+            f"| {d['compute_t']*1e3:.1f} "
+            f"| {d['memory_t']*1e3:.1f}/{d['memory_t_fused']*1e3:.1f} "
+            f"| {d['collective_t']*1e3:.1f} "
+            f"| {d['bound']} "
+            f"| {d['useful_flops_ratio']:.2f} "
+            f"| {d['mfu']:.3f} "
+            f"| {d['live_bytes_per_device']/1e9:.1f} |")
+    return "\n".join(rows)
+
+
+def roofline_report(emit, dryrun_dir: str = "experiments/dryrun"):
+    cells = load_cells(dryrun_dir)
+    ok = [c for c in cells if c.get("ok") and not c.get("skipped")]
+    if not ok:
+        emit("roofline.cells", 0, "no dry-run artifacts yet")
+        return
+    emit("roofline.cells_ok", 0, str(len(ok)))
+    for d in ok:
+        if "pod_16x16" not in str(d.get("mesh", "")):
+            continue
+        emit(f"roofline.{d['arch']}.{d['shape']}.mfu", 0,
+             f"{d['mfu']:.3f}")
+        emit(f"roofline.{d['arch']}.{d['shape']}.bound", 0, d["bound"])

@@ -1,0 +1,30 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks.kernel_bench import kernel_suite
+    from benchmarks.paper_tables import ALL
+    from benchmarks.roofline_report import roofline_report
+
+    rows = []
+
+    def emit(name, us, derived):
+        rows.append((name, us, derived))
+        print(f"{name},{us:.1f},{derived}")
+
+    print("name,us_per_call,derived")
+    for bench in ALL:
+        bench(emit)
+    kernel_suite(emit)
+    roofline_report(emit)
+    sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

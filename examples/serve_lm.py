@@ -1,0 +1,15 @@
+"""Serving example: continuous batching over a mixed request stream.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch import serve as serve_driver
+
+
+def main():
+    serve_driver.main(["--arch", "deepseek-7b", "--smoke",
+                       "--requests", "10", "--slots", "4",
+                       "--max-new", "12"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""The paper's own workload: Swin on the row-wise primitives + the ASIC
+reproduction report (Tables III/IV, Fig. 2).
+
+Run:  PYTHONPATH=src python examples/vit_rowwise.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.swin_t import CONFIG as SWIN_T, reduced
+from repro.core.asic_model import ASIC, run_asic, swin_ops, swin_params
+from repro.core.rowwise import schedule_model
+from repro.models import vision
+
+
+def main():
+    # 1. Faithful reproduction: walk Swin-T through the ASIC cycle model.
+    rep = run_asic(swin_ops(SWIN_T))
+    print("=== paper reproduction (TSMC 40nm ASIC model) ===")
+    print(f"peak throughput : {ASIC.peak_gops:.1f} GOPS "
+          f"(paper: 403.2)")
+    print(f"swin-t latency  : {rep.time_s*1e3:.2f} ms (paper: ~22.4)")
+    print(f"swin-t images/s : {rep.images_per_s:.1f} (paper: 44.5)")
+    print(f"utilization     : {rep.utilization:.4f} (paper: ~0.99)")
+    shares = rep.flops_shares()
+    p = swin_params(SWIN_T)
+    pt = sum(p.values())
+    print(f"Fig.2 FLOPs     : fc={shares['fc']:.3f} "
+          f"conv={shares['conv']:.3f} attn={shares['attn']:.3f}")
+    print(f"Fig.2 params    : fc={p['fc']/pt:.3f}")
+
+    # 2. The same GEMMs under the TPU row-wise schedule.
+    sched = schedule_model(swin_ops(SWIN_T))
+    print("\n=== TPU v5e row-wise schedule (same GEMM walk) ===")
+    print(f"utilization     : {sched.utilization:.3f} "
+          "(small ViT GEMMs pad against 128-wide MXU tiles; the ASIC's "
+          "4-wide rows fit them exactly — see EXPERIMENTS.md)")
+
+    # 3. Run a reduced Swin end-to-end through the row-wise kernels.
+    cfg = reduced()
+    key = jax.random.PRNGKey(0)
+    params = vision.init_swin(key, cfg)
+    img = jax.random.normal(key, (8, cfg.img_size, cfg.img_size, 3))
+    fwd = jax.jit(lambda p, x: vision.swin_forward(p, x, cfg))
+    logits = jax.block_until_ready(fwd(params, img))
+    t0 = time.perf_counter()
+    for _ in range(3):
+        jax.block_until_ready(fwd(params, img))
+    dt = (time.perf_counter() - t0) / 3
+    print(f"\nswin-smoke fwd on this host: {logits.shape}, "
+          f"{8/dt:.1f} img/s")
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,173 @@
+"""Sharded npz checkpointer: atomic, async, elastic.
+
+Production requirements covered without external deps:
+
+  * **Atomicity** — writes go to ``step_<N>.tmp/`` then ``os.rename`` to
+    ``step_<N>/``; a crash mid-write never corrupts the latest good
+    checkpoint. A ``latest`` marker file is updated last.
+  * **Async** — ``save_async`` snapshots to host RAM (device_get) then
+    writes on a background thread; the train loop keeps stepping.
+  * **Sharded** — each host writes only the leaves (or leaf-shards) it
+    owns; here (single host) the tree is chunked into multiple npz
+    shards to mirror the layout.
+  * **Elastic restore** — checkpoints store full (unsharded) arrays, so
+    restore works under ANY mesh shape: the restored tree is re-placed
+    with the target sharding via ``jax.device_put`` (reshard-on-load).
+  * **Integrity** — a manifest json with per-shard checksums; restore
+    verifies before use.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SHARD_BYTES = 512 * 1024 * 1024
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any,
+         extra: Optional[dict] = None) -> str:
+    """Synchronous atomic save. Returns the final directory."""
+    paths, leaves, _ = _flatten_with_paths(tree)
+    host = [np.asarray(jax.device_get(leaf)) for leaf in leaves]
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    # chunk leaves into npz shards of bounded size
+    shards, cur, cur_bytes = [], {}, 0
+    for p, a in zip(paths, host):
+        cur[p] = a
+        cur_bytes += a.nbytes
+        if cur_bytes >= _SHARD_BYTES:
+            shards.append(cur)
+            cur, cur_bytes = {}, 0
+    if cur:
+        shards.append(cur)
+
+    manifest = {"step": step, "extra": extra or {}, "shards": []}
+    for i, shard in enumerate(shards):
+        fn = f"shard_{i:05d}.npz"
+        fp = os.path.join(tmp, fn)
+        np.savez(fp, **{k.replace("/", "|"): v for k, v in shard.items()})
+        with open(fp, "rb") as f:
+            digest = hashlib.sha256(f.read()).hexdigest()
+        manifest["shards"].append({"file": fn, "keys": list(shard),
+                                   "sha256": digest})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    with open(os.path.join(ckpt_dir, "latest.tmp"), "w") as f:
+        f.write(str(step))
+    os.replace(os.path.join(ckpt_dir, "latest.tmp"),
+               os.path.join(ckpt_dir, "latest"))
+    return final
+
+
+class AsyncCheckpointer:
+    """Snapshot-to-host then write on a background thread."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save_async(self, step: int, tree: Any,
+                   extra: Optional[dict] = None):
+        self.wait()
+        # snapshot on the caller thread (device -> host), write async
+        snapshot = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                tree)
+
+        def work():
+            save(self.ckpt_dir, step, snapshot, extra)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def _gc(self):
+        steps = sorted(all_steps(self.ckpt_dir))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            out.append(int(d[5:]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    marker = os.path.join(ckpt_dir, "latest")
+    if os.path.exists(marker):
+        with open(marker) as f:
+            s = int(f.read().strip())
+        if os.path.isdir(os.path.join(ckpt_dir, f"step_{s:08d}")):
+            return s
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: Any,
+            shardings: Optional[Any] = None, verify: bool = True):
+    """Restore into the structure of `like`; device_put with `shardings`
+    (elastic: any target mesh works). Returns (tree, extra)."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    arrays = {}
+    for sh in manifest["shards"]:
+        fp = os.path.join(d, sh["file"])
+        if verify:
+            with open(fp, "rb") as f:
+                digest = hashlib.sha256(f.read()).hexdigest()
+            if digest != sh["sha256"]:
+                raise IOError(f"checksum mismatch in {fp}")
+        with np.load(fp) as z:
+            for k in z.files:
+                arrays[k.replace("|", "/")] = z[k]
+
+    paths, leaves, treedef = _flatten_with_paths(like)
+    missing = [p for p in paths if p not in arrays]
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {missing[:5]}...")
+    restored = []
+    if shardings is not None:
+        flat_sh = treedef.flatten_up_to(shardings)
+    else:
+        flat_sh = [None] * len(paths)
+    for p, ref, sh in zip(paths, leaves, flat_sh):
+        a = arrays[p].astype(ref.dtype) if hasattr(ref, "dtype") else arrays[p]
+        restored.append(jax.device_put(a, sh) if sh is not None
+                        else jax.numpy.asarray(a))
+    return treedef.unflatten(restored), manifest["extra"]

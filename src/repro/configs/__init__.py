@@ -1,0 +1,56 @@
+"""Architecture registry: ``--arch <id>`` resolves through ARCHS."""
+from __future__ import annotations
+
+from repro.configs import (deepseek_7b, gemma3_27b, granite_20b,
+                           internlm2_20b, phi35_moe, qwen2_moe, qwen2_vl,
+                           rwkv6_3b, whisper_base, zamba2)
+from repro.configs.shapes import SHAPES, SMOKE_SHAPES
+from repro.core.types import ModelConfig
+
+_MODULES = {
+    "phi3.5-moe-42b-a6.6b": phi35_moe,
+    "qwen2-moe-a2.7b": qwen2_moe,
+    "zamba2-1.2b": zamba2,
+    "qwen2-vl-2b": qwen2_vl,
+    "granite-20b": granite_20b,
+    "deepseek-7b": deepseek_7b,
+    "gemma3-27b": gemma3_27b,
+    "internlm2-20b": internlm2_20b,
+    "whisper-base": whisper_base,
+    "rwkv6-3b": rwkv6_3b,
+}
+
+ARCHS = {name: mod.CONFIG for name, mod in _MODULES.items()}
+REDUCED = {name: mod.reduced for name, mod in _MODULES.items()}
+
+# Shape-cell applicability (skips documented in DESIGN.md §5):
+#  - long_500k only for sub-quadratic archs
+#  - (no encoder-only archs in this pool, so no decode skips)
+
+
+def cell_applicable(arch: str, shape: str) -> bool:
+    cfg = ARCHS[arch]
+    if shape == "long_500k" and not cfg.subquadratic:
+        return False
+    return True
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch]
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    return REDUCED[arch]()
+
+
+def all_cells(include_skipped: bool = False):
+    for arch in ARCHS:
+        for shape in SHAPES:
+            if include_skipped or cell_applicable(arch, shape):
+                yield arch, shape
+
+
+__all__ = ["ARCHS", "REDUCED", "SHAPES", "SMOKE_SHAPES", "get_config",
+           "get_reduced", "cell_applicable", "all_cells"]

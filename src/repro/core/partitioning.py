@@ -1,0 +1,180 @@
+"""Logical-axis partitioning (MaxText-style) for the production mesh.
+
+Parameters and activations are annotated with *logical* axis names;
+``LOGICAL_RULES`` maps those to mesh axes. Models call
+``logical_constraint`` which no-ops when no mesh is active (CPU tests)
+and emits ``with_sharding_constraint`` under a mesh (dry-run / TPU).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical name -> mesh axis (or tuple of axes). Overridable per-run for
+# the §Perf hillclimb (e.g. kv_seq -> 'model' for sequence-sharded decode).
+DEFAULT_RULES = {
+    # Baseline schedule (MaxText-style FSDP + sequence parallelism):
+    #   activations: batch over (pod, data), sequence over model
+    #   parameters:  d_model dim sharded over BOTH axes (256-way FSDP;
+    #                GSPMD inserts per-layer all-gather / grad
+    #                reduce-scatter), vocab over model
+    #   MoE:         experts over model (EP) when divisible, else the
+    #                expert d_model dim rides the FSDP sharding
+    "batch": ("pod", "data", "model"),  # DP over everything that divides;
+                                        # shape-aware resolve frees 'model'
+                                        # for seq when batch < chips
+    "seq": "model",         # activation sequence dim (sequence parallel)
+    "act_embed": None,      # activation d_model dim
+    "vocab_act": "model",   # activation vocab dim (logits)
+    "embed": ("data", "model"),  # parameter d_model dim (FSDP)
+    "vocab": "model",
+    "qkv": None,            # fused q/kv output dims of projections
+    "ffn": None,
+    "experts": "model",     # expert-parallel stacked expert dim
+    "heads": "model",       # activation heads dim
+    "kv_heads": None,
+    "kv_seq": None,         # KV-cache sequence dim
+    "layers": None,
+    "conv": None,
+}
+
+_ACTIVE: dict = {"mesh": None, "rules": dict(DEFAULT_RULES)}
+
+
+def set_rules(overrides: dict) -> None:
+    _ACTIVE["rules"].update(overrides)
+
+
+def get_rules() -> dict:
+    return dict(_ACTIVE["rules"])
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    prev = dict(_ACTIVE)
+    _ACTIVE["mesh"] = mesh
+    if rules:
+        _ACTIVE["rules"] = {**DEFAULT_RULES, **rules}
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _ACTIVE.update(prev)
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ACTIVE["mesh"]
+
+
+def _mesh_axes(mesh: Mesh):
+    return set(mesh.axis_names)
+
+
+def resolve(spec_names: Tuple[Optional[str], ...],
+            mesh: Optional[Mesh] = None, shape=None) -> P:
+    """Logical names -> PartitionSpec under the active rules + mesh.
+
+    Shape-aware: when `shape` is given, axes that do not divide the dim
+    (cumulatively) are dropped *before* being marked used, so e.g.
+    batch=(pod,data,model) on a 256-batch frees 'model' for the seq dim
+    on the 512-chip mesh. This is what lets one logical profile serve
+    every (arch x shape x mesh) cell."""
+    mesh = mesh or _ACTIVE["mesh"]
+    rules = _ACTIVE["rules"]
+    axes = _mesh_axes(mesh) if mesh is not None else None
+    sizes = (dict(zip(mesh.axis_names, mesh.devices.shape))
+             if mesh is not None else {})
+    # axes already manual in an enclosing shard_map may not appear in
+    # GSPMD constraints inside the body (e.g. 'pod' under compression)
+    manual = set()
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and getattr(am, "axis_names", None):
+            manual = set(getattr(am, "manual_axes", ()) or ())
+    except Exception:
+        pass
+    out = []
+    used = set(manual)
+
+    for i, name in enumerate(spec_names):
+        ax = rules.get(name) if name else None
+        dim = shape[i] if shape is not None and i < len(shape) else None
+        cand = ax if isinstance(ax, tuple) else ((ax,) if ax else ())
+        kept = []
+        prod = 1
+        for a in cand:
+            if a is None or a in used:
+                continue
+            if axes is not None and a not in axes:
+                continue
+            if dim is not None and dim % (prod * sizes.get(a, 1)) != 0:
+                continue
+            kept.append(a)
+            prod *= sizes.get(a, 1)
+        used.update(kept)
+        out.append(tuple(kept) if len(kept) > 1
+                   else (kept[0] if kept else None))
+    return P(*out)
+
+
+def logical_constraint(x, *names):
+    """with_sharding_constraint by logical names; no-op without a mesh.
+    Axes that do not divide the dim evenly are dropped (never force GSPMD
+    into involuntary resharding/replication)."""
+    mesh = _ACTIVE["mesh"]
+    if mesh is None:
+        return x
+    spec = resolve(tuple(names), mesh, shape=x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh: Mesh, *names, shape=None) -> NamedSharding:
+    return NamedSharding(mesh, resolve(tuple(names), mesh, shape=shape))
+
+
+def constrain_tree(tree, logical_spec_tree):
+    """with_sharding_constraint a whole tree by logical specs (no-op
+    without a mesh). Used to pin gradients to the parameter sharding so
+    GSPMD emits reduce-scatters instead of full all-reduces."""
+    mesh = _ACTIVE["mesh"]
+    if mesh is None:
+        return tree
+    shardings = tree_shardings(mesh, logical_spec_tree, like=tree)
+    return jax.tree.map(jax.lax.with_sharding_constraint, tree, shardings)
+
+
+# ----------------------------------------------------------------------
+# Logical-spec trees. Initializers return (params, logical_specs) with
+# identical tree structure; this resolves a whole tree to shardings.
+# ----------------------------------------------------------------------
+
+
+def _is_spec_leaf(x) -> bool:
+    """A logical spec leaf: plain tuple of axis names (not a NamedTuple)."""
+    return (isinstance(x, tuple) and not hasattr(x, "_fields")
+            and all(e is None or isinstance(e, str) for e in x))
+
+
+def tree_shardings(mesh: Mesh, logical_tree, like=None):
+    """Resolve a logical-spec tree to NamedShardings. When `like` (a tree
+    of ShapeDtypeStructs/arrays) is given, shardings are shape-checked
+    and non-divisible axes dropped per-dimension."""
+    def one(names, ref=None):
+        return NamedSharding(mesh, resolve(
+            tuple(names), mesh, shape=ref.shape if ref is not None
+            else None))
+
+    if like is None:
+        return jax.tree.map(one, logical_tree, is_leaf=_is_spec_leaf)
+    flat_specs, treedef = jax.tree_util.tree_flatten(
+        logical_tree, is_leaf=_is_spec_leaf)
+    flat_like = treedef.flatten_up_to(like)
+    return treedef.unflatten(
+        [one(s, r) for s, r in zip(flat_specs, flat_like)])

@@ -1,0 +1,53 @@
+"""Int8 quantization — the paper uses 8-bit weights AND activations.
+
+Symmetric int8: per-output-channel scales for weights (computed offline),
+per-row dynamic scales for activations (computed on the fly, the way the
+ASIC quantizes between layers). Used by the int8 path of the row-wise
+matmul kernel and by the serving engine (weight-only or W8A8).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+
+
+def quantize_per_channel(w: jnp.ndarray, axis: int = 0
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize weights per output channel. Returns (int8 w, fp32 scale).
+
+    ``axis`` is the *contraction* axis; scales are per remaining channel.
+    """
+    amax = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / INT8_MAX
+    q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def quantize_per_row(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dynamic per-row activation quantization (rows = last-but-one dim)."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / INT8_MAX
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize(acc_i32: jnp.ndarray, x_scale: jnp.ndarray,
+               w_scale: jnp.ndarray) -> jnp.ndarray:
+    return acc_i32.astype(jnp.float32) * x_scale * w_scale
+
+
+def quantize_tree(params, predicate=None):
+    """Weight-only quantize every >=2D leaf of a param tree. Returns a
+    tree of (int8, scale) pairs for matmul weights, passthrough others."""
+    import jax
+
+    def q(path, leaf):
+        if leaf.ndim >= 2 and (predicate is None or predicate(path, leaf)):
+            qw, s = quantize_per_channel(leaf, axis=leaf.ndim - 2)
+            return {"q": qw, "s": s}
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(q, params)

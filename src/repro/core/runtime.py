@@ -1,0 +1,40 @@
+"""Global runtime context: which kernel implementation the models use.
+
+  * 'ref'       — pure-jnp oracles (XLA fuses them; default on CPU and
+                  for the dry-run, so cost_analysis reflects real math)
+  * 'pallas'    — compiled Pallas kernels (real TPU)
+  * 'interpret' — Pallas kernels in interpret mode (CPU correctness runs)
+
+Selected process-wide (launcher flag) or via context manager in tests.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_IMPL = "auto"
+
+
+def resolve_impl() -> str:
+    if _IMPL != "auto":
+        return _IMPL
+    platform = jax.default_backend()
+    return "pallas" if platform == "tpu" else "ref"
+
+
+def set_impl(impl: str) -> None:
+    global _IMPL
+    assert impl in ("auto", "ref", "pallas", "interpret"), impl
+    _IMPL = impl
+
+
+@contextlib.contextmanager
+def use_impl(impl: str):
+    global _IMPL
+    prev = _IMPL
+    set_impl(impl)
+    try:
+        yield
+    finally:
+        _IMPL = prev

@@ -1,0 +1,140 @@
+"""Row-wise attention kernel (flash-style online softmax).
+
+The paper executes attention on the same dot-product primitive as FC
+layers: Q is broadcast as the "weight", K/V rows stream as inputs, and
+softmax runs on the post-processing unit between the two matmuls. The
+TPU-native version keeps that structure — one *query row panel* is held
+stationary (the broadcast operand) while K/V row panels stream past it —
+and fuses the softmax between the two dot products via the online
+(running max / running sum) recurrence, so the S x S score matrix never
+touches HBM.
+
+Supports causal masking, sliding-window (local) attention, GQA/MQA via
+an index map folding query heads onto their KV head, and a kv_len bound
+for padded caches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+_LANES = 128
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, causal: bool, window: int,
+                 bq: int, bk: int, n_k: int, q_offset: int, kv_len: int):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * bq + q_offset      # absolute position of first query row
+    k_start = ki * bk
+
+    # Block-level skip — the kernel analogue of the ASIC leaving idle PE
+    # rows unclocked: skip blocks above the causal diagonal, outside the
+    # sliding window, or entirely past kv_len.
+    run = k_start < kv_len
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + bq - 1)
+    if window > 0:
+        run = jnp.logical_and(run, k_start + bk - 1 >= q_start - window + 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0]                      # (bq, hd)
+        k = k_ref[0]                      # (bk, hd)
+        v = v_ref[0]                      # (bk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = k_pos < kv_len
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window > 0:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[:, :1]                              # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)       # (bq, bk)
+        l_new = alpha * l_scr[:, :1] + jnp.sum(p, -1, keepdims=True)
+        pv = jax.lax.dot_general(p.astype(v.dtype), v,
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ki == n_k - 1)
+    def _fin():
+        l = jnp.maximum(l_scr[:, :1], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_p(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool = True, window: int = 0,
+                      scale: Optional[float] = None,
+                      block_q: int = 128, block_k: int = 128,
+                      q_offset: int = 0,
+                      interpret: bool = False) -> jnp.ndarray:
+    """q: (B, Hq, Sq, hd); k, v: (B, Hkv, Skv, hd) -> (B, Hq, Sq, hd).
+
+    ``q_offset``: absolute position of q[..., 0, :] (chunked prefill).
+    """
+    b, hq, sq, hd = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    scale = hd ** -0.5 if scale is None else scale
+
+    bq, bk = min(block_q, sq), min(block_k, skv)
+    sq_p, skv_p = -(-sq // bq) * bq, -(-skv // bk) * bk
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, sq_p - sq), (0, 0)))
+    if skv_p != skv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+
+    qf = q.reshape(b * hq, sq_p, hd)
+    kf = k.reshape(b * hkv, skv_p, hd)
+    vf = v.reshape(b * hkv, skv_p, hd)
+    n_k = skv_p // bk
+    grid = (b * hq, sq_p // bq, n_k)
+
+    def kv_index(bh, qi, ki):
+        return ((bh // hq) * hkv + (bh % hq) // group, ki, 0)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, n_k=n_k, q_offset=q_offset, kv_len=skv)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, hd), kv_index),
+            pl.BlockSpec((1, bk, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq_p, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, _LANES), jnp.float32),   # running max
+            pltpu.VMEM((bq, _LANES), jnp.float32),   # running denom
+            pltpu.VMEM((bq, hd), jnp.float32),       # fp32 accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, hq, sq_p, hd)[:, :, :sq, :]

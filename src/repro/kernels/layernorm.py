@@ -1,0 +1,62 @@
+"""Row-wise normalization kernel — the paper's post-processing unit.
+
+LayerNorm / RMSNorm over the channel dim, one activation *row panel* per
+grid step (same row-streaming structure as the matmul kernel). fp32
+statistics regardless of input dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _norm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float, kind: str):
+    x = x_ref[...].astype(jnp.float32)             # (bm, D)
+    if kind == "layer":
+        mu = jnp.mean(x, -1, keepdims=True)
+        xc = x - mu
+    else:                                          # rms
+        xc = x
+    var = jnp.mean(jnp.square(xc), -1, keepdims=True)
+    y = xc * jax.lax.rsqrt(var + eps)
+    y = y * g_ref[...].astype(jnp.float32)
+    if b_ref is not None:
+        y = y + b_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _norm_kernel_nobias(x_ref, g_ref, o_ref, *, eps: float, kind: str):
+    _norm_kernel(x_ref, g_ref, None, o_ref, eps=eps, kind=kind)
+
+
+def layernorm_p(x: jnp.ndarray, gamma: jnp.ndarray,
+                beta: jnp.ndarray = None, *, eps: float = 1e-6,
+                kind: str = "layer", block_m: int = 256,
+                interpret: bool = False) -> jnp.ndarray:
+    """x: (M, D); gamma/beta: (D,). kind: 'layer' | 'rms'."""
+    m, d = x.shape
+    bm = min(block_m, m)
+    mp = -(-m // bm) * bm
+    if mp != m:
+        x = jnp.pad(x, ((0, mp - m), (0, 0)))
+    grid = (mp // bm,)
+    x_spec = pl.BlockSpec((bm, d), lambda i: (i, 0))
+    g_spec = pl.BlockSpec((1, d), lambda i: (0, 0))
+    out_shape = jax.ShapeDtypeStruct((mp, d), x.dtype)
+    g2 = gamma.reshape(1, d)
+    if beta is not None:
+        fn = pl.pallas_call(
+            functools.partial(_norm_kernel, eps=eps, kind=kind),
+            grid=grid, in_specs=[x_spec, g_spec, g_spec],
+            out_specs=x_spec, out_shape=out_shape, interpret=interpret)
+        out = fn(x, g2, beta.reshape(1, d))
+    else:
+        fn = pl.pallas_call(
+            functools.partial(_norm_kernel_nobias, eps=eps, kind=kind),
+            grid=grid, in_specs=[x_spec, g_spec],
+            out_specs=x_spec, out_shape=out_shape, interpret=interpret)
+        out = fn(x, g2)
+    return out[:m]

@@ -1,0 +1,129 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+Every dense op in the framework funnels through :func:`matmul` — the
+paper's "single dot-product primitive for a unified execution". The
+wrapper handles leading batch dims, MXU padding, the adder-tree split of
+oversized contractions, and impl dispatch (pallas / interpret / jnp ref).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import runtime
+from repro.core.rowwise import plan_matmul
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_p
+from repro.kernels.layernorm import layernorm_p
+from repro.kernels.rowwise_matmul import rowwise_matmul_p
+
+
+def _flatten_leading(x):
+    lead = x.shape[:-1]
+    return x.reshape(-1, x.shape[-1]), lead
+
+
+def matmul(x: jnp.ndarray, w: jnp.ndarray, *,
+           bias: Optional[jnp.ndarray] = None,
+           activation: Optional[str] = None,
+           impl: Optional[str] = None,
+           out_dtype=None) -> jnp.ndarray:
+    """x: (..., K) @ w: (K, N) -> (..., N) with fused bias/activation."""
+    impl = impl or runtime.resolve_impl()
+    x2, lead = _flatten_leading(x)
+    if impl == "ref":
+        out = ref.matmul_ref(x2, w, bias=bias, activation=activation,
+                             out_dtype=out_dtype)
+        return out.reshape(*lead, w.shape[1])
+
+    interpret = impl == "interpret"
+    m, k = x2.shape
+    n = w.shape[1]
+    plan = plan_matmul(m, k, n, dtype_bytes=x2.dtype.itemsize)
+    if plan.k_splits == 1:
+        out = rowwise_matmul_p(x2, w, bias=bias, activation=activation,
+                               out_dtype=out_dtype, plan=plan,
+                               interpret=interpret)
+    else:
+        # Adder tree: split the contraction into VMEM-sized panels,
+        # accumulate partial products in fp32, epilogue once at the end.
+        bk = plan.bk
+        acc = None
+        for s in range(plan.k_splits):
+            xs = x2[:, s * bk:(s + 1) * bk]
+            ws = w[s * bk:(s + 1) * bk]
+            part = rowwise_matmul_p(xs, ws, out_dtype=jnp.float32,
+                                    interpret=interpret)
+            acc = part if acc is None else acc + part
+        if bias is not None:
+            acc = acc + bias.astype(jnp.float32)
+        acc = ref._ACTS[activation](acc)
+        out = acc.astype(out_dtype or x2.dtype)
+    return out.reshape(*lead, n)
+
+
+def matmul_int8(xq, wq, x_scale, w_scale, *, bias=None, activation=None,
+                impl: Optional[str] = None, out_dtype=jnp.float32):
+    """W8A8 path: int8 x int8 -> int32 accum -> dequant epilogue."""
+    impl = impl or runtime.resolve_impl()
+    x2, lead = _flatten_leading(xq)
+    s2 = x_scale.reshape(-1, 1)
+    if impl == "ref":
+        out = ref.matmul_int8_ref(x2, wq, s2, w_scale, bias=bias,
+                                  activation=activation, out_dtype=out_dtype)
+    else:
+        out = rowwise_matmul_p(x2, wq, x_scale=s2, w_scale=w_scale,
+                               bias=bias, activation=activation,
+                               out_dtype=out_dtype,
+                               interpret=impl == "interpret")
+    return out.reshape(*lead, wq.shape[1])
+
+
+def attention(q, k, v, *, causal=True, window: int = 0, scale=None,
+              q_offset: int = 0, impl: Optional[str] = None):
+    impl = impl or runtime.resolve_impl()
+    if impl == "ref":
+        return ref.attention_ref(q, k, v, causal=causal, window=window,
+                                 scale=scale, q_offset=q_offset)
+    return flash_attention_p(q, k, v, causal=causal, window=window,
+                             scale=scale, q_offset=q_offset,
+                             interpret=impl == "interpret")
+
+
+def layernorm(x, gamma, beta=None, *, eps=1e-6, kind="layer",
+              impl: Optional[str] = None):
+    impl = impl or runtime.resolve_impl()
+    x2, lead = _flatten_leading(x)
+    if impl == "ref":
+        out = ref.layernorm_ref(x2, gamma, beta, eps=eps, kind=kind)
+    else:
+        out = layernorm_p(x2, gamma, beta, eps=eps, kind=kind,
+                          interpret=impl == "interpret")
+    return out.reshape(*lead, x.shape[-1])
+
+
+def wkv(r, k, v, lw, u, *, s0=None, chunk: int = 16,
+        impl: Optional[str] = None):
+    """RWKV6 recurrence: Pallas kernel (VMEM-resident state) on TPU /
+    interpret; chunked-jnp scan otherwise. Returns (y, final state)."""
+    impl = impl or runtime.resolve_impl()
+    if impl in ("pallas", "interpret") and s0 is None:
+        from repro.kernels.wkv import wkv_p
+        return wkv_p(r, k, v, lw, u, chunk=chunk,
+                     interpret=impl == "interpret")
+    from repro.models.rwkv6 import wkv_chunked
+    return wkv_chunked(r, k, v, lw, u, chunk=chunk, s0=s0)
+
+
+def patch_embed(img, w, b=None, *, patch: int = 4,
+                impl: Optional[str] = None):
+    """4x4/stride-4 conv as space-to-depth + the SAME matmul primitive —
+    the paper's unification of conv onto the dot-product PE (Sec. IV-C)."""
+    bsz, h, wd, c = img.shape
+    gh, gw = h // patch, wd // patch
+    x = img.reshape(bsz, gh, patch, gw, patch, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(bsz, gh, gw,
+                                              patch * patch * c)
+    out = matmul(x, w, bias=b, impl=impl)
+    return out

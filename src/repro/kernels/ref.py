@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every kernel. Ground truth for allclose tests."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_ACTS = {
+    None: lambda x: x,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+}
+
+
+def matmul_ref(x, w, *, bias=None, activation=None, out_dtype=None):
+    out_dtype = out_dtype or x.dtype
+    # fp32 accumulation WITHOUT materializing fp32 casts of the operands
+    # (an .astype(f32) on FSDP-sharded weights doubles the all-gather
+    # traffic and forces a full-size copy; preferred_element_type lets
+    # the MXU consume bf16 directly)
+    acc = jax.lax.dot_general(x, w, (((x.ndim - 1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    if bias is not None:
+        acc = acc + bias.astype(jnp.float32)
+    return _ACTS[activation](acc).astype(out_dtype)
+
+
+def matmul_int8_ref(xq, wq, x_scale, w_scale, *, bias=None,
+                    activation=None, out_dtype=jnp.float32):
+    acc = jnp.dot(xq.astype(jnp.int32), wq.astype(jnp.int32))
+    out = acc.astype(jnp.float32) * x_scale * w_scale
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return _ACTS[activation](out).astype(out_dtype)
+
+
+def attention_ref(q, k, v, *, causal=True, window: int = 0,
+                  scale: Optional[float] = None, q_offset: int = 0,
+                  kv_len: Optional[int] = None):
+    """Dense softmax attention. q: (B,Hq,Sq,hd); k,v: (B,Hkv,Skv,hd)."""
+    b, hq, sq, hd = q.shape
+    _, hkv, skv, _ = k.shape
+    scale = hd ** -0.5 if scale is None else scale
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = q_offset + jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if kv_len is not None:
+        mask &= k_pos < kv_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def layernorm_ref(x, gamma, beta=None, *, eps=1e-6, kind="layer"):
+    xf = x.astype(jnp.float32)
+    if kind == "layer":
+        xf = xf - jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean(jnp.square(xf), -1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)
+    if beta is not None:
+        y = y + beta.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def patch_embed_ref(img, w, b=None, *, patch: int = 4):
+    """img: (B, H, W, C); w: (patch*patch*C, D). Conv stride=kernel=patch."""
+    bsz, h, _w, c = img.shape
+    d = w.shape[1]
+    k = jax.lax.conv_general_dilated(
+        img.astype(jnp.float32),
+        w.reshape(patch, patch, c, d).astype(jnp.float32),
+        window_strides=(patch, patch), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if b is not None:
+        k = k + b.astype(jnp.float32)
+    return k.astype(img.dtype)

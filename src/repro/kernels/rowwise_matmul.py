@@ -1,0 +1,155 @@
+"""Row-wise matmul — the paper's dot-product primitive as a Pallas kernel.
+
+Mapping of the paper's ASIC dataflow onto TPU (see DESIGN.md §2):
+
+  * **Weight broadcast / weight-stationary.** The grid is ``(n_tiles_n,
+    n_tiles_m)`` with the *m* (activation-row) axis innermost. The weight
+    panel's index map depends only on *n*, so consecutive grid steps
+    revisit the same weight block and Pallas keeps it resident in VMEM —
+    the TPU equivalent of broadcasting one weight down all 7 PE rows.
+  * **Row-wise streaming.** Activation row panels ``(bm, K)`` stream past
+    the stationary weight panel, one per grid step, exactly like input
+    rows streaming through the PE block.
+  * **Accumulator / adder tree.** The contraction runs over the whole
+    VMEM-resident K panel with an fp32 (int32 for int8) accumulator;
+    contractions too large for VMEM are split by the wrapper in
+    ``ops.py`` and summed — the paper's adder tree for large C_in.
+  * **Post-processing unit.** Bias + activation (+ int8 dequant) are
+    fused as the kernel epilogue.
+
+Supports bf16/fp32 and the paper's 8-bit W/A mode (int8 x int8 -> int32
+accumulation with per-row activation scales and per-channel weight
+scales, as in ``core/quant.py``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.rowwise import TilePlan, plan_matmul
+
+_ACTIVATIONS = {
+    None: lambda x: x,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+}
+
+
+def _kernel(x_ref, w_ref, o_ref, *, activation: Optional[str]):
+    """Float path: (bm, K) @ (K, bn) with fp32 accumulation."""
+    acc = jnp.dot(x_ref[...], w_ref[...],
+                  preferred_element_type=jnp.float32)
+    o_ref[...] = _ACTIVATIONS[activation](acc).astype(o_ref.dtype)
+
+
+def _kernel_bias(x_ref, w_ref, b_ref, o_ref, *, activation: Optional[str]):
+    acc = jnp.dot(x_ref[...], w_ref[...],
+                  preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...].astype(jnp.float32)
+    o_ref[...] = _ACTIVATIONS[activation](acc).astype(o_ref.dtype)
+
+
+def _kernel_int8(x_ref, w_ref, xs_ref, ws_ref, o_ref, *,
+                 activation: Optional[str], with_bias: bool, b_ref=None):
+    acc = jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    out = acc.astype(jnp.float32) * xs_ref[...] * ws_ref[...]
+    o_ref[...] = _ACTIVATIONS[activation](out).astype(o_ref.dtype)
+
+
+def _kernel_int8_bias(x_ref, w_ref, xs_ref, ws_ref, b_ref, o_ref, *,
+                      activation: Optional[str]):
+    acc = jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    out = acc.astype(jnp.float32) * xs_ref[...] * ws_ref[...]
+    out = out + b_ref[...].astype(jnp.float32)
+    o_ref[...] = _ACTIVATIONS[activation](out).astype(o_ref.dtype)
+
+
+def _pad2(x, m, n):
+    pm, pn = m - x.shape[0], n - x.shape[1]
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+def rowwise_matmul_p(x: jnp.ndarray, w: jnp.ndarray, *,
+                     bias: Optional[jnp.ndarray] = None,
+                     x_scale: Optional[jnp.ndarray] = None,
+                     w_scale: Optional[jnp.ndarray] = None,
+                     activation: Optional[str] = None,
+                     out_dtype=None,
+                     plan: Optional[TilePlan] = None,
+                     interpret: bool = False) -> jnp.ndarray:
+    """One pallas_call over a K panel that fits VMEM (K <= plan.bk).
+
+    x: (M, K); w: (K, N); bias: (N,) optional.
+    int8 mode when x_scale/w_scale given: x,w int8; scales fp32
+    (M,1)/(1,N).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    int8_mode = x_scale is not None
+    if plan is None:
+        plan = plan_matmul(m, k, n, dtype_bytes=x.dtype.itemsize)
+    assert k <= plan.bk * plan.k_splits
+    out_dtype = out_dtype or (jnp.float32 if int8_mode else x.dtype)
+
+    bm, bn = plan.bm, plan.bn
+    mp, np_, kp = plan.m_pad, plan.n_pad, plan.k_pad
+    x = _pad2(x, mp, kp)
+    w = _pad2(w, kp, np_)
+    grid = (np_ // bn, mp // bm)  # m innermost => weight panel stationary
+
+    x_spec = pl.BlockSpec((bm, kp), lambda ni, mi: (mi, 0))
+    w_spec = pl.BlockSpec((kp, bn), lambda ni, mi: (0, ni))
+    o_spec = pl.BlockSpec((bm, bn), lambda ni, mi: (mi, ni))
+    out_shape = jax.ShapeDtypeStruct((mp, np_), out_dtype)
+
+    if int8_mode:
+        xs = _pad2(x_scale.astype(jnp.float32), mp, 1)
+        ws = _pad2(w_scale.astype(jnp.float32), 1, np_)
+        xs_spec = pl.BlockSpec((bm, 1), lambda ni, mi: (mi, 0))
+        ws_spec = pl.BlockSpec((1, bn), lambda ni, mi: (0, ni))
+        if bias is not None:
+            b = _pad2(bias.reshape(1, -1), 1, np_)
+            fn = pl.pallas_call(
+                functools.partial(_kernel_int8_bias, activation=activation),
+                grid=grid,
+                in_specs=[x_spec, w_spec, xs_spec, ws_spec,
+                          pl.BlockSpec((1, bn), lambda ni, mi: (0, ni))],
+                out_specs=o_spec, out_shape=out_shape, interpret=interpret)
+            out = fn(x, w, xs, ws, b)
+        else:
+            fn = pl.pallas_call(
+                functools.partial(_kernel_int8, activation=activation,
+                                  with_bias=False),
+                grid=grid,
+                in_specs=[x_spec, w_spec, xs_spec, ws_spec],
+                out_specs=o_spec, out_shape=out_shape, interpret=interpret)
+            out = fn(x, w, xs, ws)
+    elif bias is not None:
+        b = _pad2(bias.reshape(1, -1).astype(jnp.float32), 1, np_)
+        fn = pl.pallas_call(
+            functools.partial(_kernel_bias, activation=activation),
+            grid=grid,
+            in_specs=[x_spec, w_spec,
+                      pl.BlockSpec((1, bn), lambda ni, mi: (0, ni))],
+            out_specs=o_spec, out_shape=out_shape, interpret=interpret)
+        out = fn(x, w, b)
+    else:
+        fn = pl.pallas_call(
+            functools.partial(_kernel, activation=activation),
+            grid=grid, in_specs=[x_spec, w_spec],
+            out_specs=o_spec, out_shape=out_shape, interpret=interpret)
+        out = fn(x, w)
+    return out[:m, :n]

@@ -1,0 +1,454 @@
+"""HLO-walking cost analyzer with while-loop trip-count scaling.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop *body* once,
+which silently undercounts every scan-stacked model by its layer count.
+This module re-derives the three roofline inputs directly from the
+optimized per-device HLO text:
+
+  * FLOPs       — every ``dot``/``convolution`` (2 x numel(output) x
+                  contraction size), scaled by enclosing while trips;
+  * HBM bytes   — per top-level instruction: operand bytes + result
+                  bytes (post-fusion, so fusion internals don't count —
+                  this is the HBM-traffic model);
+  * collective bytes — output bytes of all-gather / all-reduce /
+                  reduce-scatter / all-to-all / collective-permute.
+
+Trip counts come from the ``backend_config known_trip_count`` that XLA
+attaches to scan-derived whiles (fallback: the literal in the paired
+condition computation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "iota", "partition-id", "replica-id",
+             "bitcast-convert", "add-dependency", "domain"}
+
+
+def _shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    total_b = total_e = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total_e += n
+        total_b += n * _DTYPE_BYTES[dt]
+    return total_e, total_b
+
+
+def _dims_of(shape_str: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    rest: str          # everything after '<op>('
+
+
+@dataclasses.dataclass
+class Block:
+    name: str
+    instrs: List[Instr]
+    shapes: Dict[str, str]
+
+
+def _split_shape_op(rest: str) -> Optional[Tuple[str, str, str]]:
+    """'<shape> <op>(<args...>' -> (shape, op, args)."""
+    rest = rest.strip()
+    if rest.startswith("("):                      # tuple shape
+        depth = 0
+        end = -1
+        for i, c in enumerate(rest):
+            if c == "(":
+                depth += 1
+            elif c == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        shape, tail = rest[:end + 1], rest[end + 1:].strip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        shape, tail = rest[:sp], rest[sp + 1:].strip()
+    m = re.match(r"([\w\-]+)\(", tail)
+    if not m:
+        return None
+    return shape, m.group(1), tail[m.end():]
+
+
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+
+
+def parse_blocks(hlo: str) -> Tuple[Dict[str, Block], Optional[str]]:
+    blocks: Dict[str, Block] = {}
+    entry_name = None
+    cur: Optional[Block] = None
+    for line in hlo.splitlines():
+        if not line.startswith(" ") and "{" in line:
+            m = _HEADER_RE.match(line.strip())
+            if m:
+                cur = Block(name=m.group(1), instrs=[], shapes={})
+                blocks[cur.name] = cur
+                if line.strip().startswith("ENTRY"):
+                    entry_name = cur.name
+                continue
+        if cur is None:
+            continue
+        ls = line.strip()
+        if ls.startswith("}"):
+            cur = None
+            continue
+        if ls.startswith("ROOT "):
+            ls = ls[5:]
+        m = re.match(r"^%?([\w.\-]+)\s*=\s*(.*)$", ls)
+        if not m:
+            continue
+        parsed = _split_shape_op(m.group(2))
+        if not parsed:
+            continue
+        shape, op, args = parsed
+        instr = Instr(name=m.group(1), shape=shape, op=op, rest=args)
+        cur.instrs.append(instr)
+        cur.shapes[instr.name] = shape
+    return blocks, entry_name
+
+
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _trip_count(ins: Instr, blocks: Dict[str, Block]) -> int:
+    m = _TRIP_RE.search(ins.rest)
+    if m:
+        return int(m.group(1))
+    mc = re.search(r"condition=%?([\w.\-]+)", ins.rest)
+    if mc and mc.group(1) in blocks:
+        best = 1
+        for ci in blocks[mc.group(1)].instrs:
+            if ci.op == "constant" and ci.shape in ("s32[]", "u32[]",
+                                                    "s64[]"):
+                mm = re.search(r"^\((\d+)\)", ci.rest)
+                if mm:
+                    best = max(best, int(mm.group(1)))
+        return best
+    return 1
+
+
+def _contraction_flops(ins: Instr, shapes: Dict[str, str]) -> float:
+    out_e, _ = _shape_elems_bytes(ins.shape)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+    args = ins.rest.split("),")[0]
+    ops = _OPERAND_RE.findall(args)
+    if not m or not ops:
+        return 2.0 * out_e
+    dims = _dims_of(shapes.get(ops[0], ""))
+    k = 1
+    for idx in filter(None, m.group(1).split(",")):
+        i = int(idx)
+        if i < len(dims):
+            k *= dims[i]
+    return 2.0 * out_e * k
+
+
+ATTN_TAGS = ("chunked_attention", "_sdpa", "attention_ref",
+             "_chunked_fwd", "_flash_bwd")
+_SFID_RE = re.compile(r"stack_frame_id=(\d+)")
+ATTN_CHUNK = 1024          # models/attention.py chunk size
+
+
+def _is_score_shape(shape_str: str) -> bool:
+    # (.., Sq, chunk) probability/score tensors, incl. rank-3 reshapes;
+    # no model dim in the assigned pool equals the kv-chunk size, so the
+    # trailing-dim test is unambiguous.
+    dims = _dims_of(shape_str)
+    return len(dims) >= 3 and dims[-1] == ATTN_CHUNK
+
+
+def parse_attn_frames(hlo: str) -> set:
+    """Frame ids whose Python call chain passes through the attention
+    softmax path (resolved via the FileNames/FunctionNames/FileLocations/
+    StackFrames tables XLA emits at the top of the module text)."""
+    sections = {"FunctionNames": {}, "FileLocations": {}, "StackFrames": {}}
+    cur = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        if s in sections:
+            cur = s
+            continue
+        if cur is None:
+            continue
+        m = re.match(r"^(\d+)\s+(.*)$", s)
+        if not m:
+            if s and not s[0].isdigit():
+                cur = None
+            continue
+        idx, rest = int(m.group(1)), m.group(2)
+        if cur == "FunctionNames":
+            sections[cur][idx] = rest.strip('"')
+        elif cur == "FileLocations":
+            mm = re.search(r"function_name_id=(\d+)", rest)
+            sections[cur][idx] = int(mm.group(1)) if mm else 0
+        elif cur == "StackFrames":
+            mm = re.search(r"file_location_id=(\d+)\s+parent_frame_id=(\d+)",
+                           rest)
+            if mm:
+                sections[cur][idx] = (int(mm.group(1)), int(mm.group(2)))
+    fnames, flocs, frames = (sections["FunctionNames"],
+                             sections["FileLocations"],
+                             sections["StackFrames"])
+    attn_fn_ids = {i for i, n in fnames.items()
+                   if any(t in n for t in ATTN_TAGS)}
+    out = set()
+    for fid in frames:
+        cur_id, seen = fid, set()
+        while cur_id in frames and cur_id not in seen:
+            seen.add(cur_id)
+            loc, parent = frames[cur_id]
+            if flocs.get(loc) in attn_fn_ids:
+                out.add(fid)
+                break
+            if parent == cur_id:
+                break
+            cur_id = parent
+    return out
+
+
+_PASSTHROUGH = {"convert", "bitcast", "copy", "reshape", "transpose"}
+
+
+def _fusion_alias_info(fb: Block):
+    """For a fusion computation: which parameter indices are only
+    dynamically sliced (read a slice, not the buffer) or are DUS targets
+    (aliased in-place update). Unary passthrough chains (convert /
+    bitcast / copy — XLA:CPU's bf16 emulation inserts f32 round-trips
+    that a TPU would not materialize) are collapsed before the check.
+    -> (sliced {idx: slice_bytes}, dus {idx: update_bytes})."""
+    param_idx = {}
+    consumers = {}
+    for fins in fb.instrs:
+        if fins.op == "parameter":
+            mm = re.match(r"^(\d+)\)", fins.rest)
+            if mm:
+                param_idx[fins.name] = int(mm.group(1))
+        for on in _OPERAND_RE.findall(fins.rest.split("), ")[0]):
+            consumers.setdefault(on, []).append(fins)
+
+    def terminal_consumers(name, depth=0):
+        """Collapse unary passthrough chains to the effective consumers."""
+        out = []
+        for c in consumers.get(name, []):
+            if c.op in _PASSTHROUGH and depth < 6:
+                nxt = terminal_consumers(c.name, depth + 1)
+                out.extend(nxt if nxt else [c])
+            else:
+                out.append(c)
+        return out
+
+    def first_operand_chain(ins):
+        """Does operand 0 of `ins` trace back (through passthroughs) to a
+        parameter? Returns that parameter name or None."""
+        cur = _OPERAND_RE.findall(ins.rest.split("), ")[0])
+        cur = cur[0] if cur else None
+        for _ in range(8):
+            if cur is None:
+                return None
+            if cur in param_idx:
+                return cur
+            producer = next((fi for fi in fb.instrs if fi.name == cur),
+                            None)
+            if producer is None or producer.op not in _PASSTHROUGH:
+                return None
+            nxt = _OPERAND_RE.findall(producer.rest.split("), ")[0])
+            cur = nxt[0] if nxt else None
+        return None
+
+    sliced, dus = {}, {}
+    for pname, idx in param_idx.items():
+        cons = terminal_consumers(pname)
+        if not cons:
+            continue
+        if all(c.op == "dynamic-slice"
+               and first_operand_chain(c) == pname for c in cons):
+            _, sb = _shape_elems_bytes(cons[0].shape)
+            sliced[idx] = sb * len(cons)
+        elif (len(cons) == 1 and cons[0].op == "dynamic-update-slice"
+              and first_operand_chain(cons[0]) == pname):
+            ops_in = _OPERAND_RE.findall(cons[0].rest.split("), ")[0])
+            upd_b = 0
+            if len(ops_in) > 1 and ops_in[1] in fb.shapes:
+                _, upd_b = _shape_elems_bytes(fb.shapes[ops_in[1]])
+            if upd_b == 0:
+                _, full = _shape_elems_bytes(cons[0].shape)
+                upd_b = full // 8          # conservative guess
+            dus[idx] = upd_b
+    return sliced, dus
+
+
+def instr_traffic(ins: Instr, block: Block,
+                  blocks: Optional[Dict[str, Block]] = None):
+    """HBM traffic for one leaf instruction -> (bytes, out_b, op_b).
+
+    Aliasing-aware: dynamic-update-slice / scatter update their largest
+    operand in place (charge the written slice, not the buffer);
+    dynamic-slice reads only the slice. Fusions are inspected for
+    internal slices/updates of their parameters.
+    """
+    _, out_raw = _shape_elems_bytes(ins.shape)
+    args = ins.rest.split("), ")[0]
+    onames = _OPERAND_RE.findall(args)
+    operand_bytes = []
+    for oname in onames:
+        if oname in block.shapes:
+            _, b = _shape_elems_bytes(block.shapes[oname])
+            operand_bytes.append(b)
+        else:
+            operand_bytes.append(0)
+    op_b = sum(operand_bytes)
+
+    if ins.op in ("dynamic-update-slice", "scatter") and operand_bytes:
+        alias = max(operand_bytes)
+        slice_b = max(op_b - alias, min(operand_bytes) if operand_bytes
+                      else 0)
+        return 2 * slice_b, slice_b, slice_b
+    if ins.op == "dynamic-slice" and operand_bytes:
+        rest_ops = op_b - max(operand_bytes)
+        return 2 * out_raw + rest_ops, out_raw, out_raw + rest_ops
+
+    if ins.op == "fusion" and blocks is not None:
+        fm = re.search(r"calls=%?([\w.\-]+)", ins.rest)
+        fb = blocks.get(fm.group(1)) if fm else None
+        if fb is not None:
+            sliced, dus = _fusion_alias_info(fb)
+            if sliced or dus:
+                op_adj = 0
+                for idx, b in enumerate(operand_bytes):
+                    if idx in sliced:
+                        op_adj += sliced[idx]
+                    elif idx in dus:
+                        op_adj += dus[idx]       # read the update source
+                    else:
+                        op_adj += b
+                # aliased DUS buffers appear in the output too: subtract
+                # the buffer, add the written slice
+                out_adj = out_raw
+                for idx, upd in dus.items():
+                    if idx < len(operand_bytes):
+                        out_adj = max(out_adj - operand_bytes[idx] + upd,
+                                      0)
+                return out_adj + op_adj, out_adj, op_adj
+
+    return out_raw + op_b, out_raw, op_b
+
+
+@dataclasses.dataclass
+class HLOCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLL_KINDS})
+    # HBM traffic internal to the attention softmax path (score matrices,
+    # masks, running stats). The row-wise flash kernel keeps all of this
+    # in VMEM: `bytes - attn_internal_bytes` is the fused-kernel memory
+    # traffic (reported as the kernel-adjusted roofline term).
+    attn_internal_bytes: float = 0.0
+
+    def scaled(self, k: float) -> "HLOCost":
+        return HLOCost(self.flops * k, self.bytes * k,
+                       {n: v * k for n, v in self.coll_bytes.items()},
+                       self.attn_internal_bytes * k)
+
+    def add(self, o: "HLOCost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        for n, v in o.coll_bytes.items():
+            self.coll_bytes[n] = self.coll_bytes.get(n, 0.0) + v
+        self.attn_internal_bytes += o.attn_internal_bytes
+
+
+def _block_cost(block: Block, blocks: Dict[str, Block],
+                memo: Dict[str, HLOCost],
+                attn_frames: Optional[set] = None) -> HLOCost:
+    attn_frames = attn_frames if attn_frames is not None else set()
+    if block.name in memo:
+        return memo[block.name]
+    memo[block.name] = HLOCost()        # cycle guard
+    total = HLOCost()
+    for ins in block.instrs:
+        if ins.op in _FREE_OPS:
+            continue
+        if ins.op == "while":
+            mb = re.search(r"body=%?([\w.\-]+)", ins.rest)
+            trips = _trip_count(ins, blocks)
+            if mb and mb.group(1) in blocks:
+                total.add(_block_cost(blocks[mb.group(1)], blocks,
+                                      memo, attn_frames).scaled(trips))
+            continue
+        if ins.op in ("conditional", "call"):
+            for key in ("branch_computations", "to_apply",
+                        "true_computation", "false_computation"):
+                mm = re.search(key + r"=\{?%?([\w.\-]+)", ins.rest)
+                if mm and mm.group(1) in blocks:
+                    total.add(_block_cost(blocks[mm.group(1)], blocks,
+                                          memo, attn_frames))
+            continue
+        # leaf op: HBM traffic = operand bytes + result bytes
+        byt, out_b, op_b = instr_traffic(ins, block, blocks)
+        total.bytes += byt
+        tagged = "rowwise_attn" in ins.rest
+        if not tagged:
+            sf = _SFID_RE.search(ins.rest)
+            tagged = bool(sf and int(sf.group(1)) in attn_frames)
+        if tagged:
+            # ALL traffic inside the attention scope is kernel-internal;
+            # the roofline adds back the analytic flash-kernel minimum
+            # (q/k/v reads + out write) — see roofline.flash_min_bytes.
+            total.attn_internal_bytes += byt
+        if ins.op in ("dot", "convolution"):
+            total.flops += _contraction_flops(ins, block.shapes)
+        elif ins.op == "fusion":
+            fm = re.search(r"calls=%?([\w.\-]+)", ins.rest)
+            if fm and fm.group(1) in blocks:
+                fb = blocks[fm.group(1)]
+                for fins in fb.instrs:
+                    if fins.op in ("dot", "convolution"):
+                        total.flops += _contraction_flops(fins, fb.shapes)
+        base = next((k for k in _COLL_KINDS
+                     if ins.op == k or ins.op.startswith(k)), None)
+        if base and not ins.op.endswith("-done"):
+            total.coll_bytes[base] += out_b
+    memo[block.name] = total
+    return total
+
+
+def analyze_hlo(hlo: str) -> HLOCost:
+    blocks, entry_name = parse_blocks(hlo)
+    entry = blocks.get(entry_name) if entry_name else None
+    if entry is None:
+        entry = max(blocks.values(), key=lambda b: len(b.instrs))
+    return _block_cost(entry, blocks, {}, parse_attn_frames(hlo))

@@ -1,0 +1,102 @@
+"""Dry-run profiler: per-op and top-instruction traffic breakdowns.
+
+This is the "profile" for the §Perf hypothesis loop (no real-TPU
+timings exist here): trip-scaled HBM bytes and FLOPs per op kind, plus
+the heaviest individual instructions with their source metadata.
+
+  PYTHONPATH=src python -m repro.launch.profile --arch deepseek-7b \
+      --shape train_4k [--rules k=v,...]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import re
+from collections import defaultdict
+
+from repro.launch import hlo_cost
+
+
+def per_op_breakdown(hlo: str):
+    """-> (by_op dict, rows list of heaviest instrs)."""
+    blocks, entry_name = hlo_cost.parse_blocks(hlo)
+    entry = blocks.get(entry_name) or max(blocks.values(),
+                                          key=lambda b: len(b.instrs))
+    by_op = defaultdict(lambda: [0.0, 0.0])   # op -> [bytes, flops]
+    rows = []
+
+    def walk(bname, mult):
+        b = blocks[bname]
+        for ins in b.instrs:
+            if ins.op in hlo_cost._FREE_OPS:
+                continue
+            if ins.op == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", ins.rest)
+                t = hlo_cost._trip_count(ins, blocks)
+                if mb and mb.group(1) in blocks:
+                    walk(mb.group(1), mult * t)
+                continue
+            if ins.op in ("conditional", "call"):
+                continue
+            byt, out_b, op_b = hlo_cost.instr_traffic(ins, b, blocks)
+            fl = 0.0
+            if ins.op in ("dot", "convolution"):
+                fl = hlo_cost._contraction_flops(ins, b.shapes)
+            by_op[ins.op][0] += byt * mult
+            by_op[ins.op][1] += fl * mult
+            meta = re.search(r'op_name="([^"]*)"', ins.rest)
+            rows.append((byt * mult, mult, ins.op, ins.shape[:64],
+                         meta.group(1)[-90:] if meta else ""))
+
+    walk(entry.name, 1)
+    rows.sort(key=lambda r: -r[0])
+    return dict(by_op), rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--rules", default="")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs import SHAPES, get_config
+    from repro.core import partitioning
+    from repro.launch import dryrun
+    from repro.launch.mesh import make_production_mesh
+    from repro.train import step as tsl
+
+    rules = {}
+    for kv in filter(None, args.rules.split(",")):
+        k, _, v = kv.partition("=")
+        rules[k] = v if v else None
+
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.mesh == "multipod")
+    cell_rules = dryrun.cell_rules(cfg, shape)
+    cell_rules.update(rules)
+    with partitioning.use_mesh(mesh, cell_rules):
+        fn, fargs, in_sh, out_sh, donate = dryrun._sharding_trees(
+            mesh, cfg, shape, tsl.TrainConfig())
+        compiled = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                           donate_argnums=donate).lower(*fargs).compile()
+    hlo = compiled.as_text()
+    by_op, rows = per_op_breakdown(hlo)
+    print(f"== per-op traffic ({args.arch} x {args.shape}, {args.mesh}) ==")
+    for op, (byt, fl) in sorted(by_op.items(), key=lambda kv: -kv[1][0]):
+        print(f"  {op:24s} {byt/1e9:10.1f} GB   {fl/1e12:8.2f} TFLOP")
+    print(f"== top {args.top} instructions ==")
+    for byt, mult, op, shp, meta in rows[:args.top]:
+        print(f"  {byt/1e9:8.1f}GB x{mult:4d} {op:12s} {shp}")
+        if meta:
+            print(f"           {meta}")
+
+
+if __name__ == "__main__":
+    main()

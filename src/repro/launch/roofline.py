@@ -1,0 +1,243 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+  compute term    = HLO_FLOPs / peak_FLOP/s        (per chip)
+  memory term     = HLO_bytes / HBM_bw             (per chip)
+  collective term = collective_bytes / link_bw     (per chip)
+
+``compiled.cost_analysis()`` reports the *per-device* (post-SPMD) module,
+so the per-chip forms above match the brief's global/chips formulation.
+collective_bytes is not in cost_analysis: we parse the HLO text and sum
+wire bytes per collective kind (all-gather / all-reduce / reduce-scatter
+/ all-to-all / collective-permute).
+
+Hardware constants (TPU v5e-class, from the brief): 197 TFLOP/s bf16 per
+chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[8,128]{1,0}' -> bytes. Tuples handled by the caller."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device wire bytes by collective kind.
+
+    Convention: we count the *output* bytes of each collective op on the
+    per-device module — for all-gather that is the gathered (full) tile a
+    device must receive; for reduce-scatter the reduced shard it
+    receives; for all-reduce the full buffer (ring: ~2x, we count 1x —
+    consistent lower bound); for all-to-all / collective-permute the
+    transferred buffer.
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # match '<shape> <name> = <op>(' where op is a collective;
+        # fusion-wrapped collectives keep their op name in HLO.
+        m = re.match(r"(?:ROOT )?[%\w.\-]+ = (\(?[\w\[\],{}\s/]*\)?) "
+                     r"([\w\-]+)(?:-start|-done)?\(", ls)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        base = None
+        for k in _COLL_KINDS:
+            if op == k or op.startswith(k):
+                base = k
+                break
+        if base is None:
+            continue
+        if op.endswith("-done"):
+            continue  # counted at -start
+        out[base] += _shape_bytes(shape_str)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: Dict[str, int]
+    model_flops: float                 # 6*N*D (train) / 2*N*D (serve)
+    attn_internal_bytes: float = 0.0   # softmax-scope HBM traffic (see
+                                       # hlo_cost: flash kernel removes it)
+    flash_min_bytes: float = 0.0       # analytic kernel HBM floor
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+
+    @property
+    def compute_t(self) -> float:
+        return self.flops_per_device / self.peak_flops
+
+    @property
+    def memory_t(self) -> float:
+        return self.bytes_per_device / self.hbm_bw
+
+    @property
+    def memory_t_fused(self) -> float:
+        """Memory term with the row-wise flash attention kernel: all
+        softmax-scope traffic replaced by the kernel's analytic HBM
+        minimum (q/k/v reads, out write, recompute re-reads)."""
+        return max(self.bytes_per_device - self.attn_internal_bytes
+                   + self.flash_min_bytes, 0.0) / self.hbm_bw
+
+    @property
+    def collective_t(self) -> float:
+        return sum(self.coll_bytes_per_device.values()) / self.ici_bw
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.compute_t, "memory": self.memory_t_fused,
+                 "collective": self.collective_t}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Roofline step time = max of the three overlapped engines
+        (memory term is the fused-kernel one — the deployed config)."""
+        return max(self.compute_t, self.memory_t_fused, self.collective_t)
+
+    @property
+    def step_time_unfused(self) -> float:
+        """Paper-faithful baseline: attention scores round-trip HBM
+        between the two row-wise matmuls (the ASIC's separate
+        post-processing pass)."""
+        return max(self.compute_t, self.memory_t, self.collective_t)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (chips * HLO_FLOPs): remat/redundancy waste."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """model FLOPs / (chips * peak * step_time)."""
+        denom = self.chips * self.peak_flops * self.step_time
+        return self.model_flops / denom if denom else 0.0
+
+    @property
+    def mfu_unfused(self) -> float:
+        denom = self.chips * self.peak_flops * self.step_time_unfused
+        return self.model_flops / denom if denom else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "model_flops": self.model_flops,
+            "attn_internal_bytes": self.attn_internal_bytes,
+            "flash_min_bytes": self.flash_min_bytes,
+            "compute_t": self.compute_t, "memory_t": self.memory_t,
+            "memory_t_fused": self.memory_t_fused,
+            "collective_t": self.collective_t, "bound": self.bound,
+            "step_time": self.step_time,
+            "step_time_unfused": self.step_time_unfused,
+            "mfu": self.mfu, "mfu_unfused": self.mfu_unfused,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def model_flops(n_params_active: int, tokens: int, kind: str) -> float:
+    """6*N*D for training, 2*N*D for forward-only serving steps."""
+    mult = 6 if kind == "train" else 2
+    return float(mult) * n_params_active * tokens
+
+
+def flash_min_bytes(cfg, shape, chips: int) -> float:
+    """Analytic per-device HBM floor of the row-wise flash attention
+    kernel, per step: read q/k/v, write out (+lse), with the backward
+    re-reading q/k/v/out/do and writing dq/dk/dv (recompute-from-lse).
+
+    train:   ~3.5x the forward traffic (fwd + recompute + grads)
+    prefill: forward only
+    decode:  one cache read + O(1)-token q/out
+    """
+    hd = cfg.head_dim
+    total = 0.0
+    for stage in cfg.stages():
+        for blk in stage.body:
+            if blk.mixer != "attn":
+                continue
+            n_layers = stage.repeat
+            if shape.kind == "decode":
+                kv_len = min(blk.window, shape.seq_len) if blk.window \
+                    else shape.seq_len
+                kv_b = (shape.global_batch * kv_len * cfg.n_kv_heads
+                        * hd * 2 * 2)
+                q_b = shape.global_batch * cfg.n_heads * hd * 2 * 4
+                total += n_layers * (kv_b + q_b)
+            else:
+                t = shape.global_batch * shape.seq_len
+                q_b = t * cfg.n_heads * hd * 2 * 2     # read q, write o
+                kv_b = t * cfg.n_kv_heads * hd * 2 * 2
+                per = q_b + kv_b
+                total += n_layers * (3.5 * per if shape.kind == "train"
+                                     else per)
+    return total / chips
+
+
+def analyze(compiled, hlo_text: str, *, arch: str, shape: str,
+            mesh_name: str, chips: int, n_active: int, tokens: int,
+            kind: str, flash_min: float = 0.0) -> RooflineReport:
+    """Roofline terms from the compiled per-device module.
+
+    Uses the while-trip-scaled HLO walk (launch/hlo_cost.py) because
+    XLA's cost_analysis counts scan bodies once; the raw cost_analysis
+    numbers are preserved in the artifact for reference.
+    """
+    from repro.launch import hlo_cost
+    cost = hlo_cost.analyze_hlo(hlo_text)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=cost.flops, bytes_per_device=cost.bytes,
+        coll_bytes_per_device={k: int(v)
+                               for k, v in cost.coll_bytes.items()},
+        model_flops=model_flops(n_active, tokens, kind),
+        attn_internal_bytes=cost.attn_internal_bytes,
+        flash_min_bytes=flash_min)
+
+
+def raw_cost_analysis(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0))}

@@ -1,0 +1,102 @@
+"""Abstract input/state specs for every (arch x shape) cell.
+
+Everything here is ShapeDtypeStruct-based: weak-type-correct, shardable,
+zero allocation — the dry-run lowers against these stand-ins.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ModelConfig, ShapeSpec
+from repro.models import lm
+from repro.train import step as train_step_lib
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Abstract model inputs for one cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        specs = {"tokens": sds((b, s), jnp.int32)}
+        if shape.kind == "train":
+            specs["labels"] = sds((b, s), jnp.int32)
+        if cfg.frontend == "audio":
+            specs["frames"] = sds((b, cfg.cross_len, cfg.d_model),
+                                  jnp.bfloat16)
+        if cfg.frontend == "vision":
+            n_patches = min(1024, s // 4)
+            specs["vis_embeds"] = sds((b, n_patches, cfg.d_model),
+                                      jnp.bfloat16)
+        return specs
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": sds((b, 1), jnp.int32),
+            "lengths": sds((b,), jnp.int32)}
+
+
+def abstract_init(cfg: ModelConfig) -> Tuple:
+    """(params_struct, logical_specs): structure without allocation.
+
+    The logical-spec tree contains static strings, so we obtain it by
+    tracing init once with eval_shape (params become structs; the spec
+    tree is built from python values and survives as-is).
+    """
+    box = {}
+
+    def go(k):
+        params, spec_tree = lm.init_lm(k, cfg)
+        box["specs"] = spec_tree       # static python data, via closure
+        return params
+
+    params = jax.eval_shape(go, jax.random.PRNGKey(0))
+    return params, box["specs"]
+
+
+def abstract_train_state(cfg: ModelConfig, tcfg) -> Tuple:
+    """(TrainState structs, TrainState logical specs)."""
+    params, pspecs = abstract_init(cfg)
+    state = jax.eval_shape(
+        lambda p: train_step_lib.init_state(p, tcfg), params)
+    specs = train_step_lib.state_logical_specs(pspecs, tcfg)
+    return state, specs
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, alloc: int):
+    cache = jax.eval_shape(
+        lambda: lm.init_cache(cfg, batch, alloc, jnp.bfloat16))
+    specs = lm.cache_logical_specs(cache)
+    return cache, specs
+
+
+def param_count(cfg: ModelConfig) -> dict:
+    """Exact N (and active-N for MoE) from the abstract param tree."""
+    params, _ = abstract_init(cfg)
+    total = sum(int(x.size) for x in jax.tree.leaves(params))
+    # report true params (exclude vocab- and expert-padding)
+    pad = (lm.padded_vocab(cfg) - cfg.vocab) * cfg.d_model
+    total -= pad * (1 if cfg.tie_embeddings else 2)
+    if cfg.moe is not None:
+        from repro.models.moe import padded_experts
+        e_pad = padded_experts(cfg) - cfg.moe.n_experts
+        per_expert = 3 * cfg.d_model * cfg.moe.d_ff
+        total -= (e_pad * per_expert + e_pad * cfg.d_model) * cfg.n_layers
+    active = total
+    if cfg.moe is not None:
+        mo = cfg.moe
+        # routed expert leaves: wi/wg/wo carry the n_experts dim
+        inactive_frac = (mo.n_experts - mo.top_k) / mo.n_experts
+        expert_params = 0
+        for stage_p in params["stages"]:
+            for blk in stage_p["stacked"].values():
+                ffn = blk.get("ffn", {})
+                for name in ("wi", "wg", "wo"):
+                    if name in ffn:
+                        expert_params += int(ffn[name].size)
+        active = total - int(expert_params * inactive_frac)
+    return {"total": total, "active": active}

@@ -1,0 +1,438 @@
+"""Attention layer: GQA/MQA, RoPE/M-RoPE, sliding windows, KV caches.
+
+Three execution paths, all funneling the projections through the
+row-wise matmul primitive (the paper's unification):
+
+  * ``dense``   — materialized scores; small sequences / smoke tests.
+  * ``chunked`` — jnp online-softmax scan over KV blocks; sub-quadratic
+                  memory; what the dry-run lowers (flash-equivalent HLO).
+  * ``pallas``/``interpret`` — the row-wise flash kernel.
+
+Decode uses a flash-decode formulation (chunked over the cache with a
+running log-sum-exp), optionally sequence-sharded over the model axis
+via shard_map with a psum LSE combine (see serve/).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import runtime
+from repro.core.partitioning import logical_constraint
+from repro.core.types import ModelConfig
+from repro.kernels import ops
+from repro.models import rope as rope_lib
+
+DENSE_MAX_SEQ = 2048      # above this, 'ref' impl switches to chunked
+
+
+def init(key, cfg: ModelConfig, stack: Optional[int], dtype,
+         cross: bool = False):
+    """Returns (params, logical_specs). stack=None => unstacked (shared)."""
+    d, hd = cfg.d_model, cfg.head_dim
+    qo, kvo = cfg.n_heads * hd, cfg.n_kv_heads * hd
+    lead = () if stack is None else (stack,)
+    llead = () if stack is None else ("layers",)
+    ks = jax.random.split(key, 4)
+
+    def w(k, din, dout, scale=1.0):
+        std = scale / math.sqrt(din)
+        return (jax.random.normal(k, lead + (din, dout), jnp.float32)
+                * std).astype(dtype)
+
+    params = {"wq": w(ks[0], d, qo), "wk": w(ks[1], d, kvo),
+              "wv": w(ks[2], d, kvo), "wo": w(ks[3], qo, d)}
+    specs = {"wq": llead + ("embed", "qkv"), "wk": llead + ("embed", "qkv"),
+             "wv": llead + ("embed", "qkv"), "wo": llead + ("qkv", "embed")}
+    return params, specs
+
+
+class KVCache(NamedTuple):
+    """Per-layer KV cache. k/v: (B, S_alloc, Hkv, hd).
+
+    For sliding-window layers S_alloc == window and writes wrap around
+    (ring buffer); ``length`` tracking lives with the serving state.
+    """
+    k: jnp.ndarray
+    v: jnp.ndarray
+
+
+def init_cache(cfg: ModelConfig, batch: int, alloc_len: int, dtype,
+               window: int = 0):
+    s = min(alloc_len, window) if window else alloc_len
+    shape = (batch, s, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def cache_specs(window: int = 0):
+    names = ("batch", "kv_seq", "kv_heads", None)
+    return KVCache(k=names, v=names)
+
+
+def _apply_rope(q, k, cfg: ModelConfig, positions):
+    if cfg.rope == "none":
+        return q, k
+    if cfg.rope == "mrope":
+        if positions.ndim == 2:            # text-only: (B,S) -> (3,B,S)
+            positions = rope_lib.text_positions3(positions)
+        q = rope_lib.apply_mrope(q, positions, cfg.rope_theta)
+        k = rope_lib.apply_mrope(k, positions, cfg.rope_theta)
+    else:
+        q = rope_lib.apply_rope(q, positions, cfg.rope_theta)
+        k = rope_lib.apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def _chunk_mask(base, chunk, q_pos, limit, causal, window):
+    """(B,1,1,Sq,chunk) validity mask for one KV chunk."""
+    k_pos = base + jnp.arange(chunk)                           # (chunk,)
+    mask = (k_pos[None, :] < limit[:, None])[:, None, None, None, :]
+    if causal:
+        mask = jnp.logical_and(mask,
+                               (k_pos[None, :] <= q_pos)[None, None, None])
+    if window > 0:
+        mask = jnp.logical_and(
+            mask, (k_pos[None, :] > q_pos - window)[None, None, None])
+    return mask
+
+
+def _chunked_fwd(q, k, v, limit, *, causal, window, q_offset, chunk):
+    """Returns (out (B,Hq,Sq,hd), lse (B,Hkv,g,Sq) fp32)."""
+    b, hq, sq, hd = q.shape
+    _, hkv, skv, _ = k.shape
+    g = hq // hkv
+    chunk = min(chunk, skv)
+    pad = (-skv) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nc = (skv + pad) // chunk
+    kc = k.reshape(b, hkv, nc, chunk, hd).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, hkv, nc, chunk, hd).transpose(2, 0, 1, 3, 4)
+    qg = q.reshape(b, hkv, g, sq, hd)
+    scale = hd ** -0.5
+    q_pos = q_offset + jnp.arange(sq)[:, None]                 # (Sq,1)
+
+    def step(carry, inp):
+        # NB: the chunk base position rides in the carry (not the xs) so
+        # XLA cannot hoist/stack the position masks for every chunk — the
+        # hoisted form materializes a full Sq x Skv mask in HBM.
+        # q/k stay bf16; the MXU accumulates in f32 (no materialized
+        # f32 copies of the operands).
+        m, l, acc, base = carry
+        kb, vb = inp
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _chunk_mask(base, chunk, q_pos, limit, causal, window)
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, -1))
+        p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, -1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new, base + chunk), None
+
+    m0 = jnp.full((b, hkv, g, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, hd), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(
+        step, (m0, l0, a0, jnp.zeros((), jnp.int32)), (kc, vc))
+    l = jnp.maximum(l, 1e-30)
+    out = acc / l[..., None]
+    lse = m + jnp.log(l)
+    return out.reshape(b, hq, sq, hd).astype(q.dtype), lse
+
+
+def _flash_bwd(res, dout, *, causal, window, q_offset, chunk):
+    """Flash-attention backward: recompute p per chunk from saved lse —
+    no stacked score saves (the scan-AD default materializes every
+    chunk's probabilities for the backward; this is the row-wise
+    kernel's recompute-from-stats strategy in jnp)."""
+    q, k, v, limit, out, lse = res
+    b, hq, sq, hd = q.shape
+    _, hkv, skv, _ = k.shape
+    g = hq // hkv
+    chunk = min(chunk, skv)
+    pad = (-skv) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nc = (skv + pad) // chunk
+    kc = k.reshape(b, hkv, nc, chunk, hd).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, hkv, nc, chunk, hd).transpose(2, 0, 1, 3, 4)
+    qg = q.reshape(b, hkv, g, sq, hd)
+    do = dout.reshape(b, hkv, g, sq, hd)
+    og = out.reshape(b, hkv, g, sq, hd)
+    scale = hd ** -0.5
+    q_pos = q_offset + jnp.arange(sq)[:, None]
+    d_term = jnp.einsum("bhgqd,bhgqd->bhgq", do, og,
+                        preferred_element_type=jnp.float32)
+
+    def step(carry, inp):
+        dq_acc, base = carry
+        kb, vb = inp
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _chunk_mask(base, chunk, q_pos, limit, causal, window)
+        p = jnp.where(mask, jnp.exp(s - lse[..., None]), 0.0)
+        pb = p.astype(vb.dtype)
+        dv = jnp.einsum("bhgqk,bhgqd->bhkd", pb, do,
+                        preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bhgqd,bhkd->bhgqk", do, vb,
+                        preferred_element_type=jnp.float32)
+        ds = (p * (dp - d_term[..., None]) * scale)
+        dsb = ds.astype(kb.dtype)
+        dq_acc = dq_acc + jnp.einsum("bhgqk,bhkd->bhgqd", dsb, kb,
+                                     preferred_element_type=jnp.float32)
+        dk = jnp.einsum("bhgqk,bhgqd->bhkd", dsb, qg,
+                        preferred_element_type=jnp.float32)
+        return (dq_acc, base + chunk), (dk, dv)
+
+    dq0 = jnp.zeros((b, hkv, g, sq, hd), jnp.float32)
+    (dq, _), (dks, dvs) = jax.lax.scan(
+        step, (dq0, jnp.zeros((), jnp.int32)), (kc, vc))
+    dk = dks.transpose(1, 2, 0, 3, 4).reshape(b, hkv, nc * chunk, hd)
+    dv = dvs.transpose(1, 2, 0, 3, 4).reshape(b, hkv, nc * chunk, hd)
+    dq = dq.reshape(b, hq, sq, hd)
+    return (dq.astype(q.dtype), dk[:, :, :skv].astype(k.dtype),
+            dv[:, :, :skv].astype(v.dtype), None)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _chunked_attention_diff(q, k, v, limit, causal, window, q_offset,
+                            chunk):
+    out, _ = _chunked_fwd(q, k, v, limit, causal=causal, window=window,
+                          q_offset=q_offset, chunk=chunk)
+    return out
+
+
+def _cad_fwd(q, k, v, limit, causal, window, q_offset, chunk):
+    out, lse = _chunked_fwd(q, k, v, limit, causal=causal, window=window,
+                            q_offset=q_offset, chunk=chunk)
+    return out, (q, k, v, limit, out, lse)
+
+
+def _cad_bwd(causal, window, q_offset, chunk, res, dout):
+    return _flash_bwd(res, dout, causal=causal, window=window,
+                      q_offset=q_offset, chunk=chunk)
+
+
+_chunked_attention_diff.defvjp(_cad_fwd, _cad_bwd)
+
+
+def chunked_attention(q, k, v, *, causal=True, window: int = 0,
+                      q_offset=0, kv_len=None, chunk: int = 1024):
+    """Online-softmax scan over KV chunks. q: (B,Hq,Sq,hd); k/v GQA.
+
+    q_offset may be a traced scalar (decode). kv_len masks padded cache.
+    The train path (static offset, no kv_len) uses the flash custom-VJP.
+    """
+    b = q.shape[0]
+    skv = k.shape[2]
+    limit = skv if kv_len is None else kv_len
+    limit = jnp.broadcast_to(jnp.asarray(limit), (b,))
+    with jax.named_scope("rowwise_attn"):
+        if isinstance(q_offset, int) and kv_len is None:
+            return _chunked_attention_diff(q, k, v, limit, causal, window,
+                                           q_offset, chunk)
+        out, _ = _chunked_fwd(q, k, v, limit, causal=causal, window=window,
+                              q_offset=q_offset, chunk=chunk)
+        return out
+
+
+def _sdpa(q, k, v, *, causal, window, q_offset=0, kv_len=None):
+    """Impl dispatch for the core attention op."""
+    impl = runtime.resolve_impl()
+    static_off = isinstance(q_offset, int)
+    if impl == "ref":
+        if (q.shape[2] <= DENSE_MAX_SEQ and k.shape[2] <= DENSE_MAX_SEQ
+                and static_off and kv_len is None):
+            return ops.attention(q, k, v, causal=causal, window=window,
+                                 q_offset=q_offset, impl="ref")
+        return chunked_attention(q, k, v, causal=causal, window=window,
+                                 q_offset=q_offset, kv_len=kv_len)
+    if not static_off or kv_len is not None:
+        # kernel path currently takes static offsets; decode goes chunked
+        return chunked_attention(q, k, v, causal=causal, window=window,
+                                 q_offset=q_offset, kv_len=kv_len)
+    return ops.attention(q, k, v, causal=causal, window=window,
+                         q_offset=q_offset, impl=impl)
+
+
+def apply(params, x, *, cfg: ModelConfig, positions, window: int = 0,
+          causal: bool = True, kv: Optional[tuple] = None):
+    """Full-sequence forward (train / prefill).
+
+    kv: optional (k_states, v_states) override for cross-attention.
+    Returns (out, (k_heads, v_heads)) — the heads are cached by prefill.
+    """
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = ops.matmul(x, params["wq"]).reshape(b, s, hq, hd)
+    if kv is None:
+        k = ops.matmul(x, params["wk"]).reshape(b, s, hkv, hd)
+        v = ops.matmul(x, params["wv"]).reshape(b, s, hkv, hd)
+        q, k = _apply_rope(q, k, cfg, positions)
+    else:
+        xk, xv = kv
+        sk = xk.shape[1]
+        k = ops.matmul(xk, params["wk"]).reshape(b, sk, hkv, hd)
+        v = ops.matmul(xv, params["wv"]).reshape(b, sk, hkv, hd)
+    qh = q.transpose(0, 2, 1, 3)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    qh = logical_constraint(qh, "batch", "heads", "seq", None)
+    out = _sdpa(qh, kh, vh, causal=causal, window=window)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
+    return ops.matmul(out, params["wo"]), (k, v)
+
+
+def write_cache(cache: KVCache, k_new, v_new, pos, window: int = 0):
+    """Insert (B, S_new, Hkv, hd) states at position ``pos`` (scalar or
+    per-batch (B,) ), ring-buffered when the layer is windowed."""
+    alloc = cache.k.shape[1]
+    s_new = k_new.shape[1]
+    if isinstance(pos, int) or pos.ndim == 0:
+        pos = jnp.broadcast_to(jnp.asarray(pos), (cache.k.shape[0],))
+    idx = (pos[:, None] + jnp.arange(s_new)[None]) % alloc     # (B,S_new)
+
+    def upd(buf, new):
+        bidx = jnp.arange(buf.shape[0])[:, None]
+        return buf.at[bidx, idx].set(new.astype(buf.dtype))
+
+    return KVCache(k=upd(cache.k, k_new), v=upd(cache.v, v_new))
+
+
+def decode_apply(params, x, cache: KVCache, *, cfg: ModelConfig,
+                 lengths, window: int = 0):
+    """One-token decode. x: (B, 1, d); lengths: (B,) tokens already in
+    cache. Returns (out, new_cache).
+
+    Global (non-window) layers use the sequence-sharded flash decode
+    when the cache is sharded along seq over 'model' and the
+    'decode_attn' rule is 'sharded' — partial per-shard softmax combined
+    with a log-sum-exp psum, so the cache is never gathered.
+    """
+    from repro.core import partitioning
+    b, _, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = ops.matmul(x, params["wq"]).reshape(b, 1, hq, hd)
+    k = ops.matmul(x, params["wk"]).reshape(b, 1, hkv, hd)
+    v = ops.matmul(x, params["wv"]).reshape(b, 1, hkv, hd)
+    q, k = _apply_rope(q, k, cfg, lengths[:, None])
+
+    mesh = partitioning.active_mesh()
+    use_sharded = (
+        window == 0 and mesh is not None
+        and "model" in mesh.axis_names
+        and partitioning.get_rules().get("decode_attn") == "sharded"
+        and partitioning.get_rules().get("kv_seq") == "model"
+        and cache.k.shape[1] % dict(zip(
+            mesh.axis_names, mesh.devices.shape))["model"] == 0)
+    if use_sharded:
+        out, cache = _decode_seq_sharded(q, k, v, cache, lengths,
+                                         cfg=cfg, mesh=mesh)
+        out = out.reshape(b, 1, hq * hd)
+        return ops.matmul(out, params["wo"]), cache
+
+    cache = write_cache(cache, k, v, lengths, window)
+    alloc = cache.k.shape[1]
+    kh = cache.k.transpose(0, 2, 1, 3)
+    vh = cache.v.transpose(0, 2, 1, 3)
+    qh = q.transpose(0, 2, 1, 3)
+
+    if window and window <= alloc:
+        # Ring buffer holds exactly the last `window` tokens; every valid
+        # entry attends (causality is implied by what was written).
+        kv_len = jnp.minimum(lengths + 1, alloc)
+    else:
+        kv_len = lengths + 1
+    out = chunked_attention(qh, kh, vh, causal=False, window=0,
+                            q_offset=0, kv_len=kv_len)
+    out = out.reshape(b, 1, hq * hd)
+    return ops.matmul(out, params["wo"]), cache
+
+
+def _decode_seq_sharded(q, k_new, v_new, cache: KVCache, lengths, *,
+                        cfg: ModelConfig, mesh):
+    """Flash-decode with the KV cache sharded along sequence over
+    'model': each shard writes/attends its local chunk; partial
+    (m, l, acc) combine via pmax/psum of O(B x H x hd) — the cache is
+    never all-gathered. Beyond-paper optimization (see EXPERIMENTS §Perf).
+    """
+    from repro.core import partitioning
+    b, _, hq, hd = q.shape
+    hkv = cfg.n_kv_heads
+    g = hq // hkv
+    s_alloc = cache.k.shape[1]
+    n_model = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    s_loc = s_alloc // n_model
+    scale = hd ** -0.5
+
+    r = partitioning.resolve
+    cache_spec = r(("batch", "kv_seq", "kv_heads", None), mesh,
+                   shape=cache.k.shape)
+    q_spec = r(("batch", "kv_heads", None, None), mesh,
+               shape=(b, hq, 1, hd))
+    new_spec = r(("batch", None, "kv_heads", None), mesh,
+                 shape=k_new.shape)
+    len_spec = r(("batch",), mesh, shape=lengths.shape)
+
+    def body(qb, knb, vnb, kc, vc, lens):
+        bl = qb.shape[0]
+        shard = jax.lax.axis_index("model")
+        base = shard * s_loc
+        # write the new token's K/V if its slot lives on this shard
+        pos = lens                                    # (B,) absolute
+        lpos = jnp.clip(pos - base, 0, s_loc - 1)
+        here = (pos >= base) & (pos < base + s_loc)   # (B,)
+        bidx = jnp.arange(bl)
+        upd_k = kc.at[bidx, lpos].set(
+            jnp.where(here[:, None, None], knb[:, 0].astype(kc.dtype),
+                      kc[bidx, lpos]))
+        upd_v = vc.at[bidx, lpos].set(
+            jnp.where(here[:, None, None], vnb[:, 0].astype(vc.dtype),
+                      vc[bidx, lpos]))
+        # local partial attention (single query row)
+        hkv_l = upd_k.shape[2]
+        qg = qb.reshape(bl, hkv_l, g, hd).astype(jnp.float32)
+        kh = upd_k.transpose(0, 2, 1, 3).astype(jnp.float32)
+        vh = upd_v.transpose(0, 2, 1, 3).astype(jnp.float32)
+        s = jnp.einsum("bhgd,bhkd->bhgk", qg, kh) * scale
+        k_pos = base + jnp.arange(s_loc)
+        valid = k_pos[None] < (lens + 1)[:, None]     # (B, s_loc)
+        s = jnp.where(valid[:, None, None], s, -1e30)
+        m_i = jnp.max(s, -1)                          # (B, hkv, g)
+        p = jnp.where(valid[:, None, None], jnp.exp(s - m_i[..., None]),
+                      0.0)
+        l_i = jnp.sum(p, -1)
+        acc_i = jnp.einsum("bhgk,bhkd->bhgd", p, vh)
+        # LSE combine across shards: tiny psums instead of a cache gather
+        m = jax.lax.pmax(m_i, "model")
+        alpha = jnp.exp(m_i - m)
+        l_tot = jax.lax.psum(l_i * alpha, "model")
+        acc = jax.lax.psum(acc_i * alpha[..., None], "model")
+        out = acc / jnp.maximum(l_tot, 1e-30)[..., None]
+        out = out.reshape(bl, 1, hkv_l * g * hd)
+        # pin cache dtype: an f32 leak here makes the layer scan convert
+        # the WHOLE stacked cache f32<->bf16 every iteration
+        return (out.astype(qb.dtype), upd_k.astype(kc.dtype),
+                upd_v.astype(vc.dtype))
+
+    out_spec = r(("batch", None, "kv_heads"), mesh,
+                 shape=(b, 1, hq * hd))
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(q_spec, new_spec, new_spec, cache_spec, cache_spec,
+                  len_spec),
+        out_specs=(out_spec, cache_spec, cache_spec),
+        check_vma=False)
+    out, new_k, new_v = fn(q.transpose(0, 2, 1, 3), k_new, v_new,
+                           cache.k, cache.v, lengths)
+    return out, KVCache(k=new_k, v=new_v)

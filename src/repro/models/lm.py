@@ -1,0 +1,376 @@
+"""Stage-compiled language model: init / train forward / prefill / decode.
+
+Layers are *scan-stacked*: per stage, parameters carry a leading repeat
+dim and a single ``lax.scan`` executes the whole stage, so HLO size (and
+compile time for the 512-device dry-run) is depth-independent.
+Heterogeneous stacks (gemma3's 5-local:1-global, zamba2's mamba+shared-
+attention) scan over super-block bodies; zamba2's shared block params are
+closed over instead of stacked (single weight copy, per the Zamba2
+design).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.partitioning import logical_constraint
+from repro.core.types import ModelConfig, Stage
+from repro.kernels import ops
+from repro.models import attention, blocks, mamba2, rope
+from repro.models.attention import KVCache
+
+# ----------------------------------------------------------------------
+# Init
+# ----------------------------------------------------------------------
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    """Vocab rounded up to a shardable multiple (MaxText-style padding);
+    the pad columns are masked to -inf in the logits."""
+    return -(-cfg.vocab // 256) * 256
+
+
+def _init_stage(key, stage: Stage, cfg: ModelConfig, dtype):
+    stacked_p, stacked_s, shared_p, shared_s = {}, {}, {}, {}
+    for i, blk in enumerate(stage.body):
+        k = jax.random.fold_in(key, i)
+        stack = None if blk.shared else stage.repeat
+        p, s = blocks.init_block(k, blk, cfg, stack, dtype)
+        if blk.shared:
+            shared_p[str(i)], shared_s[str(i)] = p, s
+        else:
+            stacked_p[str(i)], stacked_s[str(i)] = p, s
+    return ({"stacked": stacked_p, "shared": shared_p},
+            {"stacked": stacked_s, "shared": shared_s})
+
+
+def init_lm(key, cfg: ModelConfig, dtype=None):
+    """Returns (params, logical_specs) with identical tree structure."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    vp = padded_vocab(cfg)
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(ks[0], (vp, d), jnp.float32)
+                  * 0.02).astype(dtype),
+    }
+    specs: Dict[str, Any] = {"embed": ("vocab", "embed")}
+    params["stages"], specs["stages"] = [], []
+    for si, stage in enumerate(cfg.stages()):
+        p, s = _init_stage(jax.random.fold_in(ks[1], si), stage, cfg, dtype)
+        params["stages"].append(p)
+        specs["stages"].append(s)
+    params["final_norm"] = {"g": jnp.ones((d,), dtype)}
+    specs["final_norm"] = {"g": (None,)}
+    if cfg.norm == "layer":
+        params["final_norm"]["b"] = jnp.zeros((d,), dtype)
+        specs["final_norm"]["b"] = (None,)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(ks[2], (d, vp), jnp.float32)
+                             / math.sqrt(d)).astype(dtype)
+        specs["lm_head"] = ("embed", "vocab")
+    if cfg.encdec:
+        enc_p, enc_s = [], []
+        for si, stage in enumerate(cfg.enc_stages()):
+            p, s = _init_stage(jax.random.fold_in(ks[3], si), stage, cfg,
+                               dtype)
+            enc_p.append(p)
+            enc_s.append(s)
+        fin_p = {"g": jnp.ones((d,), dtype)}
+        fin_s = {"g": (None,)}
+        if cfg.norm == "layer":
+            fin_p["b"] = jnp.zeros((d,), dtype)
+            fin_s["b"] = (None,)
+        params["enc"] = {"stages": enc_p, "final_norm": fin_p}
+        specs["enc"] = {"stages": enc_s, "final_norm": fin_s}
+    return params, specs
+
+
+# ----------------------------------------------------------------------
+# Stage execution
+# ----------------------------------------------------------------------
+
+
+def _run_stage(stage: Stage, sp, x, *, cfg: ModelConfig, mode: str,
+               positions=None, lengths=None, cache=None, enc_out=None,
+               causal=True, remat=False):
+    """Scan a stage. Returns (x, aux, new_cache_or_prefill_states)."""
+    stacked, shared = sp["stacked"], sp["shared"]
+
+    def body(carry, xs):
+        x, aux = carry
+        sliced, cache_slice = xs
+        out_states = {}
+        for i, blk in enumerate(stage.body):
+            key = str(i)
+            bp = sliced[key] if key in sliced else shared[key]
+            csl = cache_slice.get(key) if cache_slice else None
+            x, io = blocks.apply_block(
+                blk, bp, x, cfg=cfg, mode=mode, positions=positions,
+                lengths=lengths, cache=csl, enc_out=enc_out,
+                window_override=None if causal else 0)
+            aux = aux + io.aux
+            if mode == "decode" and io.new_cache is not None:
+                out_states[key] = io.new_cache
+            elif mode == "prefill" and io.prefill_state is not None:
+                out_states[key] = io.prefill_state
+        return (x, aux), out_states
+
+    if remat and mode == "train":
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    xs = (stacked, cache) if cache is not None else (stacked, {})
+    (x, aux), states = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                    xs, length=stage.repeat)
+    return x, aux, states
+
+
+def _run_stages(stage_params, stages, x, *, cache=None, **kw):
+    aux_total = jnp.zeros((), jnp.float32)
+    all_states = []
+    for si, (stage, sp) in enumerate(zip(stages, stage_params)):
+        stage_cache = cache[si] if cache is not None else None
+        x, aux, states = _run_stage(stage, sp, x, cache=stage_cache, **kw)
+        aux_total = aux_total + aux
+        all_states.append(states)
+    return x, aux_total, all_states
+
+
+# ----------------------------------------------------------------------
+# Embedding / logits
+# ----------------------------------------------------------------------
+
+
+def embed(params, tokens, cfg: ModelConfig, extra: Optional[dict] = None):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.frontend == "vision" and extra and "vis_embeds" in extra:
+        ve = extra["vis_embeds"].astype(x.dtype)
+        x = jax.lax.dynamic_update_slice(x, ve, (0, 0, 0))
+    return x
+
+
+def unembed(params, x, cfg: ModelConfig):
+    x = ops.layernorm(x, params["final_norm"]["g"],
+                      params["final_norm"].get("b"), kind=cfg.norm)
+    if cfg.tie_embeddings:
+        w = params["embed"].T
+    else:
+        w = params["lm_head"]
+    logits = ops.matmul(x, w, out_dtype=jnp.float32)
+    vp = padded_vocab(cfg)
+    if vp != cfg.vocab:  # mask pad columns out of the softmax
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1)
+        logits = jnp.where(col < cfg.vocab, logits, -1e30)
+    return logical_constraint(logits, "batch", "seq", "vocab_act")
+
+
+def _positions(cfg: ModelConfig, tokens, extra):
+    b, s = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if cfg.rope == "mrope" and extra and "positions3" in extra:
+        return extra["positions3"]
+    return pos
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """Whisper encoder: precomputed frame embeddings (B, T, d)."""
+    x = frames + rope.sinusoidal_embedding(
+        frames.shape[1], cfg.d_model).astype(frames.dtype)[None]
+    x, _, _ = _run_stages(params["enc"]["stages"], cfg.enc_stages(), x,
+                          cfg=cfg, mode="train", positions=None,
+                          causal=False, remat=True)
+    fn = params["enc"]["final_norm"]
+    return ops.layernorm(x, fn["g"], fn.get("b"), kind=cfg.norm)
+
+
+def forward(params, tokens, cfg: ModelConfig, *,
+            extra: Optional[dict] = None, remat: bool = True):
+    """Full train-mode forward -> (logits, aux_loss)."""
+    x = embed(params, tokens, cfg, extra)
+    x = logical_constraint(x, "batch", "seq", "act_embed")
+    if cfg.rope == "none" and not cfg.encdec:
+        x = x + rope.sinusoidal_embedding(
+            x.shape[1], cfg.d_model).astype(x.dtype)[None]
+    enc_out = None
+    if cfg.encdec:
+        assert extra is not None and "frames" in extra
+        enc_out = encode(params, extra["frames"], cfg)
+        x = x + rope.sinusoidal_embedding(
+            x.shape[1], cfg.d_model).astype(x.dtype)[None]
+    positions = _positions(cfg, tokens, extra)
+    x, aux, _ = _run_stages(params["stages"], cfg.stages(), x, cfg=cfg,
+                            mode="train", positions=positions,
+                            enc_out=enc_out, remat=remat)
+    return unembed(params, x, cfg), aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, remat: bool = True):
+    """Cross-entropy next-token loss -> (loss, metrics)."""
+    logits, aux = forward(params, batch["tokens"], cfg,
+                          extra={k: v for k, v in batch.items()
+                                 if k not in ("tokens", "labels")} or None,
+                          remat=remat)
+    labels = batch["labels"]
+    valid = (labels >= 0)
+    safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * valid
+    ntok = jnp.maximum(valid.sum(), 1)
+    loss = nll.sum() / ntok
+    metrics = {"loss": loss, "aux_loss": aux, "ntokens": ntok,
+               "accuracy": ((jnp.argmax(logits, -1) == safe) * valid
+                            ).sum() / ntok}
+    return loss + aux, metrics
+
+
+# ----------------------------------------------------------------------
+# KV / SSM cache: init, specs, prefill conversion
+# ----------------------------------------------------------------------
+
+
+def _slot_cache_init(blk, cfg: ModelConfig, repeat, batch, alloc, dtype):
+    c = {}
+    if blk.mixer == "attn":
+        w = blk.window
+        s_alloc = min(alloc, w) if w else alloc
+        shape = (repeat, batch, s_alloc, cfg.n_kv_heads, cfg.head_dim)
+        c["kv"] = KVCache(k=jnp.zeros(shape, dtype),
+                          v=jnp.zeros(shape, dtype))
+    elif blk.mixer == "mamba2":
+        st = mamba2.init_state(cfg, batch, dtype)
+        c["mamba"] = jax.tree.map(
+            lambda a: jnp.zeros((repeat,) + a.shape, a.dtype), st)
+    elif blk.mixer == "rwkv6":
+        r = cfg.rwkv
+        h = cfg.d_model // r.head_dim
+        c["rwkv_t"] = {
+            "x_prev_t": jnp.zeros((repeat, batch, cfg.d_model), dtype),
+            "wkv": jnp.zeros((repeat, batch, h, r.head_dim, r.head_dim),
+                             jnp.float32)}
+    if blk.cross_attn:
+        shape = (repeat, batch, cfg.cross_len, cfg.n_kv_heads, cfg.head_dim)
+        c["cross_kv"] = (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+    if blk.ffn == "rwkv6_cmix":
+        c["rwkv_c"] = {"x_prev_c": jnp.zeros((repeat, batch, cfg.d_model),
+                                             dtype)}
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, alloc: int, dtype=None):
+    """Zeroed cache for standalone decode (the decode dry-run cells)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    out = []
+    for stage in cfg.stages():
+        sc = {}
+        for i, blk in enumerate(stage.body):
+            c = _slot_cache_init(blk, cfg, stage.repeat, batch, alloc,
+                                 dtype)
+            if c:
+                sc[str(i)] = c
+        out.append(sc)
+    return out
+
+
+def cache_logical_specs(cache):
+    """Logical sharding names for every cache leaf (layer, batch, seq...)."""
+    def spec(leaf):
+        names = [None] * leaf.ndim
+        names[0] = "layers"
+        if leaf.ndim >= 2:
+            names[1] = "batch"
+        if leaf.ndim == 5:           # (R, B, S, kv_heads, hd)
+            names[2] = "kv_seq"
+            names[3] = "kv_heads"
+        return tuple(names)
+
+    return jax.tree.map(spec, cache)
+
+
+def _ring_from_prefill(k, window):
+    """Convert stacked prefill states (R,B,S,H,hd) to a ring buffer of
+    size `window` holding the last `window` tokens at slots p % window."""
+    s = k.shape[2]
+    if s <= window:
+        pad = [(0, 0)] * k.ndim
+        pad[2] = (0, window - s)
+        return jnp.pad(k, pad)
+    p = jnp.arange(s - window, s)
+    order = jnp.argsort(p % window)
+    return jnp.take(k, p[order], axis=2)
+
+
+def states_to_cache(cfg: ModelConfig, all_states, alloc: int):
+    """Prefill scan outputs -> decode cache (pads KV to alloc)."""
+    out = []
+    for stage, states in zip(cfg.stages(), all_states):
+        sc = {}
+        for i, blk in enumerate(stage.body):
+            st = states.get(str(i))
+            if st is None:
+                continue
+            c = {}
+            if "kv" in st:
+                k, v = st["kv"]
+                if blk.window:
+                    k = _ring_from_prefill(k, blk.window)
+                    v = _ring_from_prefill(v, blk.window)
+                else:
+                    pad = [(0, 0)] * k.ndim
+                    pad[2] = (0, alloc - k.shape[2])
+                    k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+                c["kv"] = KVCache(k=k, v=v)
+            if "mamba" in st:
+                c["mamba"] = st["mamba"]
+            if "rwkv_t" in st:
+                c["rwkv_t"] = st["rwkv_t"]
+            if "rwkv_c" in st:
+                c["rwkv_c"] = st["rwkv_c"]
+            if "cross_kv" in st:
+                c["cross_kv"] = st["cross_kv"]
+            sc[str(i)] = c
+        out.append(sc)
+    return out
+
+
+def prefill(params, tokens, cfg: ModelConfig, *,
+            extra: Optional[dict] = None, alloc: Optional[int] = None):
+    """Full-sequence prefill -> (last-position logits, cache)."""
+    b, s = tokens.shape
+    alloc = alloc or s
+    x = embed(params, tokens, cfg, extra)
+    x = logical_constraint(x, "batch", "seq", "act_embed")
+    if cfg.rope == "none" and not cfg.encdec:
+        x = x + rope.sinusoidal_embedding(s, cfg.d_model).astype(
+            x.dtype)[None]
+    enc_out = None
+    if cfg.encdec:
+        enc_out = encode(params, extra["frames"], cfg)
+        x = x + rope.sinusoidal_embedding(s, cfg.d_model).astype(
+            x.dtype)[None]
+    positions = _positions(cfg, tokens, extra)
+    x, _, states = _run_stages(params["stages"], cfg.stages(), x, cfg=cfg,
+                               mode="prefill", positions=positions,
+                               enc_out=enc_out, remat=False)
+    cache = states_to_cache(cfg, states, alloc)
+    logits = unembed(params, x[:, -1:], cfg)
+    return logits[:, 0], cache
+
+
+def decode_step(params, cache, tokens, lengths, cfg: ModelConfig):
+    """One decode step. tokens: (B, 1); lengths: (B,) tokens in cache.
+    Returns (logits (B, vocab), new_cache)."""
+    x = embed(params, tokens, cfg, None)
+    if cfg.rope == "none" or cfg.encdec:
+        pe = rope.sinusoidal_embedding(1 << 16, cfg.d_model)
+        x = x + pe[lengths][:, None].astype(x.dtype)
+    x, _, new_cache = _run_stages(params["stages"], cfg.stages(), x,
+                                  cfg=cfg, mode="decode", positions=None,
+                                  lengths=lengths, cache=cache,
+                                  remat=False)
+    logits = unembed(params, x, cfg)
+    return logits[:, 0], new_cache

@@ -1,0 +1,81 @@
+"""Feed-forward layers (the FC layers that dominate the paper's Fig. 2).
+
+Variants: GELU MLP (2 mats), SwiGLU / GeGLU (3 mats), RWKV channel-mix
+(relu^2 + receptance gate). All matmuls go through the row-wise primitive.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ModelConfig
+from repro.kernels import ops
+
+GATED = ("silu", "geglu")
+
+
+def init(key, cfg: ModelConfig, stack: Optional[int], dtype,
+         d_ff: Optional[int] = None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    lead = () if stack is None else (stack,)
+    llead = () if stack is None else ("layers",)
+    ks = jax.random.split(key, 3)
+
+    def w(k, din, dout):
+        return (jax.random.normal(k, lead + (din, dout), jnp.float32)
+                / math.sqrt(din)).astype(dtype)
+
+    params = {"wi": w(ks[0], d, f), "wo": w(ks[1], f, d)}
+    specs = {"wi": llead + ("embed", "ffn"), "wo": llead + ("ffn", "embed")}
+    if cfg.act in GATED:
+        params["wg"] = w(ks[2], d, f)
+        specs["wg"] = llead + ("embed", "ffn")
+    return params, specs
+
+
+def apply(params, x, *, cfg: ModelConfig):
+    act = {"silu": "silu", "geglu": "gelu", "gelu": "gelu",
+           "relu": "relu"}[cfg.act]
+    if cfg.act in GATED:
+        g = ops.matmul(x, params["wg"], activation=act)
+        h = ops.matmul(x, params["wi"]) * g
+    else:
+        h = ops.matmul(x, params["wi"], activation=act)
+    return ops.matmul(h, params["wo"])
+
+
+# ---------------------------- RWKV channel-mix -------------------------
+
+
+def init_cmix(key, cfg: ModelConfig, stack: Optional[int], dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    lead = () if stack is None else (stack,)
+    llead = () if stack is None else ("layers",)
+    ks = jax.random.split(key, 4)
+
+    def w(k, din, dout):
+        return (jax.random.normal(k, lead + (din, dout), jnp.float32)
+                / math.sqrt(din)).astype(dtype)
+
+    params = {"wk": w(ks[0], d, f), "wv": w(ks[1], f, d),
+              "wr": w(ks[2], d, d),
+              "mu_k": jnp.full(lead + (d,), 0.5, dtype),
+              "mu_r": jnp.full(lead + (d,), 0.5, dtype)}
+    specs = {"wk": llead + ("embed", "ffn"), "wv": llead + ("ffn", "embed"),
+             "wr": llead + ("embed", "embed"),
+             "mu_k": llead + (None,), "mu_r": llead + (None,)}
+    return params, specs
+
+
+def apply_cmix(params, x, x_prev):
+    """RWKV6 channel-mix. x: (B,S,d); x_prev: token-shifted x."""
+    xk = x + (x_prev - x) * params["mu_k"].astype(x.dtype)
+    xr = x + (x_prev - x) * params["mu_r"].astype(x.dtype)
+    k = ops.matmul(xk, params["wk"], activation="relu2")
+    r = jax.nn.sigmoid(ops.matmul(xr, params["wr"]).astype(jnp.float32))
+    v = ops.matmul(k, params["wv"])
+    return (r * v.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,74 @@
+"""Rotary embeddings: standard (neox-style) and M-RoPE (qwen2-vl).
+
+M-RoPE splits the head-dim rotation frequencies into (t, h, w) sections;
+text tokens carry identical (t,h,w) positions (reducing to 1-D RoPE),
+vision patch embeddings carry their (frame, row, col) indices.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def _rotate(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x1 * sin + x2 * cos], axis=-1)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10_000.0) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def mrope_sections(hd: int) -> Tuple[int, int, int]:
+    """Default (t,h,w) split of the half-dim (qwen2-vl uses 16/24/24 @128)."""
+    half = hd // 2
+    t = half // 4
+    h = (half - t) // 2
+    return (t, h, half - t - h)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray,
+                theta: float = 10_000.0,
+                sections: Tuple[int, int, int] = None) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions3: (3, B, S) int32 for (t, h, w)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    if sections is None:
+        sections = mrope_sections(hd)
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # section id per frequency index
+    sec = jnp.concatenate([jnp.full((n,), i, jnp.int32)
+                           for i, n in enumerate(sections)])
+    # pos per (B,S,half): pick t/h/w position stream per frequency
+    pos = jnp.take_along_axis(
+        positions3.transpose(1, 2, 0).astype(jnp.float32),      # (B,S,3)
+        jnp.broadcast_to(sec[None, None, :],
+                         positions3.shape[1:] + (half,)), axis=-1)
+    ang = pos * freqs                                           # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def text_positions3(positions: jnp.ndarray) -> jnp.ndarray:
+    """Text-only M-RoPE positions: t = h = w = position."""
+    return jnp.broadcast_to(positions[None], (3,) + positions.shape)
+
+
+def sinusoidal_embedding(seq_len: int, d: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal absolute positions (S, d)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half) / (half - 1))
+    ang = jnp.arange(seq_len)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

@@ -1,0 +1,142 @@
+"""Serving engine: batched prefill/decode with continuous batching.
+
+vLLM-style slot management adapted to JAX static shapes: a fixed batch of
+`n_slots` sequences decodes in lockstep; when a sequence finishes, its
+slot is refilled from the request queue by (a) running a single-request
+prefill and (b) scattering the prefilled KV into the batched cache at
+that slot index. All jitted steps have static shapes, so continuous
+batching never recompiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ModelConfig
+from repro.models import lm
+from repro.serve import sampling
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: jnp.ndarray              # (S,) int32
+    max_new: int = 32
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: List[int]
+    prompt_len: int
+    latency_s: float
+
+
+def _scatter_slot(cache, slot_cache, slot: int, prefill_len: int):
+    """Insert a single-request prefilled cache into batch slot `slot`."""
+    def ins(dst, src):
+        if dst.ndim >= 3 and src.shape[0] == dst.shape[0]:
+            # (R, B, ...) leaves: write batch index `slot`
+            if src.ndim == dst.ndim and src.shape[1] == 1:
+                if dst.ndim >= 4 and src.shape[2] <= dst.shape[2]:
+                    pad = [(0, 0)] * src.ndim
+                    pad[2] = (0, dst.shape[2] - src.shape[2])
+                    src = jnp.pad(src, pad)
+                return jax.lax.dynamic_update_slice(
+                    dst, src.astype(dst.dtype),
+                    (0, slot) + (0,) * (dst.ndim - 2))
+        return dst
+    return jax.tree.map(ins, cache, slot_cache)
+
+
+class Engine:
+    def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
+                 max_len: int = 512, eos_id: int = 1,
+                 temperature: float = 0.0, seed: int = 0):
+        self.params, self.cfg = params, cfg
+        self.n_slots, self.max_len, self.eos_id = n_slots, max_len, eos_id
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.cache = lm.init_cache(cfg, n_slots, max_len)
+        self.lengths = jnp.zeros((n_slots,), jnp.int32)
+        self.active = [None] * n_slots           # Request or None
+        self.out_tokens: List[List[int]] = [[] for _ in range(n_slots)]
+        self.started = [0.0] * n_slots
+        self.queue: deque = deque()
+        self.completed: List[Completion] = []
+        self._last = jnp.zeros((n_slots, 1), jnp.int32)
+
+        def step_fn(params, cache, tokens, lengths, key):
+            logits, cache = lm.decode_step(params, cache, tokens, lengths,
+                                           cfg)
+            if temperature == 0.0:
+                nxt = sampling.greedy(logits)
+            else:
+                nxt = sampling.sample(logits, key,
+                                      temperature=temperature)
+            return nxt, cache
+
+        self._step = jax.jit(step_fn)
+        self._prefill = jax.jit(
+            lambda p, t: lm.prefill(p, t, cfg, alloc=max_len))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _fill_slots(self):
+        for slot in range(self.n_slots):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.popleft()
+                t0 = time.perf_counter()
+                logits, pcache = self._prefill(self.params,
+                                               req.prompt[None])
+                plen = int(req.prompt.shape[0])
+                self.cache = _scatter_slot(self.cache, pcache, slot, plen)
+                first = int(jnp.argmax(logits[0]))
+                self.active[slot] = req
+                self.out_tokens[slot] = [first]
+                self.started[slot] = t0
+                self.lengths = self.lengths.at[slot].set(plen)
+                self._last = self._last.at[slot, 0].set(first)
+
+    def _retire(self, slot):
+        req = self.active[slot]
+        self.completed.append(Completion(
+            rid=req.rid, tokens=list(self.out_tokens[slot]),
+            prompt_len=int(req.prompt.shape[0]),
+            latency_s=time.perf_counter() - self.started[slot]))
+        self.active[slot] = None
+        self.out_tokens[slot] = []
+
+    def run(self, max_steps: int = 10_000) -> List[Completion]:
+        """Continuous-batching loop until queue + slots drain."""
+        steps = 0
+        while (any(a is not None for a in self.active) or self.queue):
+            self._fill_slots()
+            if not any(a is not None for a in self.active):
+                break
+            self.key, sk = jax.random.split(self.key)
+            nxt, self.cache = self._step(self.params, self.cache,
+                                         self._last, self.lengths, sk)
+            self.lengths = self.lengths + 1
+            self._last = nxt[:, None]
+            for slot in range(self.n_slots):
+                req = self.active[slot]
+                if req is None:
+                    continue
+                tok = int(nxt[slot])
+                self.out_tokens[slot].append(tok)
+                done = (tok == self.eos_id
+                        or len(self.out_tokens[slot]) >= req.max_new
+                        or int(self.lengths[slot]) >= self.max_len - 1)
+                if done:
+                    self._retire(slot)
+            steps += 1
+            if steps >= max_steps:
+                break
+        return self.completed

@@ -1,0 +1,201 @@
+"""Multi-device scenarios run in a subprocess with 8 host devices.
+
+Invoked by test_dist.py:  python tests/dist_worker.py <scenario>
+Exit code 0 = pass. Prints diagnostics on failure.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax                                               # noqa: E402
+import jax.numpy as jnp                                  # noqa: E402
+import numpy as np                                       # noqa: E402
+
+from repro.configs import REDUCED                        # noqa: E402
+from repro.core import partitioning                     # noqa: E402
+from repro.launch import specs as specs_lib              # noqa: E402
+from repro.models import lm                              # noqa: E402
+from repro.train import step as tsl                      # noqa: E402
+
+
+def _mesh222():
+    return jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+
+
+def _setup(arch="deepseek-7b", b=4, s=32):
+    cfg = REDUCED[arch]()
+    key = jax.random.PRNGKey(0)
+    params, pspecs = lm.init_lm(key, cfg, dtype=jnp.float32)
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+    return cfg, params, pspecs, batch
+
+
+def scenario_fsdp_matches_single():
+    """Sharded train step == unsharded step, bit-for-bit-ish."""
+    cfg, params, pspecs, batch = _setup()
+    tcfg = tsl.TrainConfig(remat=True)
+    step = tsl.make_train_step(cfg, tcfg)
+    # single device reference
+    state0 = tsl.init_state(params, tcfg)
+    ref_state, ref_metrics = jax.jit(step)(state0, batch)
+
+    mesh = _mesh222()
+    with partitioning.use_mesh(mesh):
+        state_specs = tsl.state_logical_specs(pspecs, tcfg)
+        state = tsl.init_state(params, tcfg)
+        state_sh = partitioning.tree_shardings(mesh, state_specs,
+                                               like=state)
+        state = jax.device_put(state, state_sh)
+        batch_sh = {k: partitioning.named_sharding(
+            mesh, "batch", *([None] * (v.ndim - 1)), shape=v.shape)
+            for k, v in batch.items()}
+        batch_d = jax.device_put(batch, batch_sh)
+        jstep = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                        out_shardings=(state_sh, None))
+        new_state, metrics = jstep(state, batch_d)
+    dl = abs(float(metrics["loss"]) - float(ref_metrics["loss"]))
+    assert dl < 1e-4, f"loss mismatch {dl}"
+    diffs = [float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+        jax.tree.leaves(ref_state.params),
+        jax.tree.leaves(jax.device_get(new_state.params)))]
+    assert max(diffs) < 1e-4, f"param mismatch {max(diffs)}"
+    print("fsdp ok: dloss", dl, "max dparam", max(diffs))
+
+
+def scenario_moe_ep_matches_local():
+    """shard_map expert-parallel dispatch == local dispatch."""
+    from repro.models import moe
+    cfg = REDUCED["phi3.5-moe-42b-a6.6b"]()
+    key = jax.random.PRNGKey(0)
+    params, _ = moe.init(key, cfg, stack=None, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (4, 16, cfg.d_model))
+    out_local, aux_local = moe._apply_local(params, x, cfg=cfg)
+    mesh = _mesh222()
+    with partitioning.use_mesh(mesh):
+        # batch 4 over (pod=2, data=2); model=2 divides padded experts (4)
+        fn = jax.jit(lambda p, xx: moe.apply(p, xx, cfg=cfg))
+        out_ep, aux_ep = fn(params, x)
+    d = float(jnp.max(jnp.abs(out_local - jax.device_get(out_ep))))
+    # capacity is computed per shard in EP (tokens/shard) vs global in
+    # local mode; with the smoke capacity_factor=4 no tokens drop.
+    assert d < 1e-4, f"moe mismatch {d}"
+    da = abs(float(aux_local) - float(aux_ep))
+    assert da < 1e-5, f"aux mismatch {da}"
+    print("moe ep ok:", d, da)
+
+
+def scenario_compressed_pods_close():
+    """int8+EF cross-pod gradient compression stays close to exact and
+    the error-feedback residual is populated."""
+    cfg, params, pspecs, batch = _setup(b=8, s=16)
+    mesh = _mesh222()
+    t_exact = tsl.TrainConfig(remat=False)
+    t_comp = tsl.TrainConfig(remat=False, compress_pods=True)
+    step_e = tsl.make_train_step(cfg, t_exact)
+    step_c = tsl.make_train_step(cfg, t_comp, mesh=mesh)
+    with partitioning.use_mesh(mesh):
+        se = tsl.init_state(params, t_exact)
+        sc = tsl.init_state(params, t_comp)
+        ne, me = jax.jit(step_e)(se, batch)
+        nc, mc = jax.jit(step_c)(sc, batch)
+    assert abs(float(me["loss"]) - float(mc["loss"])) < 1e-4
+    # parameters after one step: compression is lossy but close
+    rel = [float(jnp.max(jnp.abs(a - b)) / (jnp.max(jnp.abs(a)) + 1e-9))
+           for a, b in zip(jax.tree.leaves(ne.params),
+                           jax.tree.leaves(nc.params))]
+    assert max(rel) < 0.1, f"compressed step diverged: {max(rel)}"
+    res_norm = sum(float(jnp.sum(jnp.abs(r)))
+                   for r in jax.tree.leaves(nc.residual))
+    assert res_norm > 0, "error-feedback residual empty"
+    print("compression ok: max rel", max(rel), "residual", res_norm)
+
+
+def scenario_elastic_restore():
+    """Checkpoint saved under mesh (2,2,2) restores onto mesh (4,2)."""
+    import tempfile
+
+    from repro.checkpoint import checkpointer as ckpt
+    cfg, params, pspecs, batch = _setup()
+    tcfg = tsl.TrainConfig()
+    state = tsl.init_state(params, tcfg)
+    mesh_a = _mesh222()
+    with partitioning.use_mesh(mesh_a):
+        specs_tree = tsl.state_logical_specs(pspecs, tcfg)
+        sh_a = partitioning.tree_shardings(mesh_a, specs_tree, like=state)
+        state_a = jax.device_put(state, sh_a)
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 7, state_a, extra={"data_step": 7})
+        mesh_b = jax.make_mesh((4, 2), ("data", "model"))
+        with partitioning.use_mesh(mesh_b):
+            sh_b = partitioning.tree_shardings(mesh_b, specs_tree,
+                                               like=state)
+            restored, extra = ckpt.restore(d, 7, state, shardings=sh_b)
+        assert extra["data_step"] == 7
+        for a, b in zip(jax.tree.leaves(state_a),
+                        jax.tree.leaves(restored)):
+            np.testing.assert_allclose(np.asarray(jax.device_get(a)),
+                                       np.asarray(jax.device_get(b)),
+                                       rtol=0, atol=0)
+    print("elastic ok")
+
+
+def scenario_seq_sharded_decode():
+    """Sequence-sharded flash decode == unsharded decode numerics."""
+    cfg = REDUCED["deepseek-7b"]()
+    key = jax.random.PRNGKey(5)
+    params, _ = lm.init_lm(key, cfg, dtype=jnp.float32)
+    b, s_prefill, alloc = 2, 12, 32
+    tokens = jax.random.randint(key, (b, s_prefill + 6), 0, cfg.vocab)
+    # reference: no mesh
+    lg_ref, cache_ref = lm.prefill(params, tokens[:, :s_prefill], cfg,
+                                   alloc=alloc)
+    lengths = jnp.full((b,), s_prefill, jnp.int32)
+    refs = []
+    for t in range(s_prefill, s_prefill + 6):
+        lg_ref, cache_ref = lm.decode_step(
+            params, cache_ref, tokens[:, t:t + 1], lengths, cfg)
+        refs.append(lg_ref)
+        lengths = lengths + 1
+
+    mesh = _mesh222()
+    rules = {"kv_seq": "model", "decode_attn": "sharded"}
+    with partitioning.use_mesh(mesh, rules):
+        lg, cache = jax.jit(
+            lambda p, tk: lm.prefill(p, tk, cfg, alloc=alloc))(
+                params, tokens[:, :s_prefill])
+        lengths = jnp.full((b,), s_prefill, jnp.int32)
+        step = jax.jit(lambda p, c, tk, ln: lm.decode_step(p, c, tk, ln,
+                                                           cfg))
+        for i, t in enumerate(range(s_prefill, s_prefill + 6)):
+            lg, cache = step(params, cache, tokens[:, t:t + 1], lengths)
+            err = float(jnp.max(jnp.abs(lg - refs[i])))
+            assert err < 1e-3, f"step {i}: {err}"
+            lengths = lengths + 1
+    print("seq-sharded decode ok")
+
+
+def scenario_dryrun_small():
+    """The dry-run machinery end-to-end on the host mesh: lower+compile
+    a reduced arch with the production logical rules."""
+    cfg = REDUCED["gemma3-27b"]()
+    mesh = _mesh222()
+    from repro.core.types import ShapeSpec
+    shape = ShapeSpec("train_small", "train", seq_len=32, global_batch=4)
+    from repro.launch import dryrun
+    with partitioning.use_mesh(mesh, dryrun.cell_rules(cfg, shape)):
+        fn, args, in_sh, out_sh, donate = dryrun._sharding_trees(
+            mesh, cfg, shape, tsl.TrainConfig())
+        compiled = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                           donate_argnums=donate).lower(*args).compile()
+    from repro.launch import hlo_cost
+    cost = hlo_cost.analyze_hlo(compiled.as_text())
+    assert cost.flops > 0
+    print("dryrun-small ok: flops", cost.flops)
+
+
+if __name__ == "__main__":
+    name = sys.argv[1]
+    globals()[f"scenario_{name}"]()
+    print("PASS", name)

@@ -1,0 +1,64 @@
+"""Faithful-reproduction checks against the paper's own claims.
+
+Paper: Wang & Chang, "Row-wise Accelerator for Vision Transformer", 2022.
+  - Table III: 403.2 GOPS peak @ 600 MHz, 336 MACs
+  - Table IV:  ~22.4 ms / image => ~44.5 img/s on Swin-T
+  - Sec. V:    overall utilization ~99%
+  - Fig. 2:    FC >= 97% of FLOPs, >= 83% of params
+  - Sec. IV-C: 448 cycles per conv output channel on 224x224
+"""
+import math
+
+from repro.configs.swin_t import CONFIG as SWIN_T
+from repro.core.asic_model import (ASIC, ASICGeometry, op_cycles, run_asic,
+                                   swin_ops, swin_params)
+from repro.core.rowwise import OpRecord
+
+
+def test_peak_throughput_exact():
+    assert ASIC.macs == 336                      # 12 blocks x 7 rows x 4
+    assert abs(ASIC.peak_gops - 403.2) < 1e-9    # Table III
+
+
+def test_conv_cycles_match_paper():
+    # Sec. IV-C: 224x224 image => 56x56 outputs, 7/cycle => 448 cycles
+    # per output channel.
+    op = OpRecord("patch", "conv", m=56 * 56, k=48, n=1)
+    assert op_cycles(op) == 448
+
+
+def test_swin_t_latency_and_throughput():
+    rep = run_asic(swin_ops(SWIN_T))
+    # Swin-T ~4.5 GMACs (the paper's 22.4 ms at 403.2 GOPS implies
+    # 4.5e9 MACs); our walk must land within 5% of both claims.
+    assert abs(rep.total_macs - 4.5e9) / 4.5e9 < 0.05
+    assert abs(rep.time_s * 1e3 - 22.4) / 22.4 < 0.05       # Table IV
+    assert abs(rep.images_per_s - 44.5) / 44.5 < 0.05       # Table IV
+    assert rep.utilization >= 0.97                          # Sec. V "~99%"
+
+
+def test_fig2_flops_distribution():
+    rep = run_asic(swin_ops(SWIN_T))
+    shares = rep.flops_shares()
+    assert shares["fc"] >= 0.95          # paper: >97% (we classify merge
+    assert shares["conv"] <= 0.01        # + head as fc; within 2%)
+    assert shares["attn"] <= 0.04        # paper: <=3% for MHA
+
+
+def test_fig2_param_distribution():
+    p = swin_params(SWIN_T)
+    total = sum(p.values())
+    assert p["fc"] / total >= 0.83       # paper: >83%
+
+
+def test_attention_uses_8_blocks():
+    # Sec. IV-E: attention runs on 8 of 12 blocks => 2/3 peak util
+    op = OpRecord("qk", "attn", m=49, k=32, n=49)
+    cyc = op_cycles(op)
+    util = op.macs / (ASIC.macs * cyc)
+    assert abs(util - 8 / 12) < 1e-6
+
+
+def test_gops_scale_with_geometry():
+    big = ASICGeometry(blocks=24)
+    assert abs(big.peak_gops - 2 * ASIC.peak_gops) < 1e-9

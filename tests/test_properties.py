@@ -1,0 +1,94 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import (dequantize, quantize_per_channel,
+                              quantize_per_row)
+from repro.core.rowwise import V5E, plan_matmul
+from repro.launch import hlo_cost
+from repro.optim import adamw
+
+dims = st.integers(min_value=1, max_value=4096)
+
+
+@settings(max_examples=60, deadline=None)
+@given(m=dims, k=dims, n=dims,
+       dtype_bytes=st.sampled_from([1, 2, 4]))
+def test_plan_matmul_invariants(m, k, n, dtype_bytes):
+    p = plan_matmul(m, k, n, dtype_bytes=dtype_bytes)
+    # tiles divide the padded problem exactly
+    assert p.m_pad % p.bm == 0 and p.n_pad % p.bn == 0
+    assert p.m_pad >= m and p.n_pad >= n and p.k_pad >= k
+    assert p.k_splits * p.bk >= k
+    # utilization = useful / padded is a true fraction
+    assert 0.0 < p.utilization <= 1.0
+    # claimed working set fits VMEM
+    assert p.vmem_bytes <= V5E.vmem_bytes
+    # grid covers the padded output exactly
+    assert p.grid == (p.n_pad // p.bn, p.m_pad // p.bm)
+    # flops are exactly 2*m*k*n (no phantom work in the plan)
+    assert p.flops == 2 * m * k * n
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_quantization_error_bound(seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(16, 8)) * rng.uniform(0.1, 10),
+                    jnp.float32)
+    q, s = quantize_per_channel(w)
+    err = jnp.abs(q.astype(jnp.float32) * s - w)
+    # symmetric int8: error bounded by half a quantization step
+    assert float(jnp.max(err - s / 2)) < 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_activation_quant_rows_independent(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(4, 16)), jnp.float32)
+    q1, s1 = quantize_per_row(x)
+    # scaling one row must not change other rows' quantization
+    x2 = x.at[0].multiply(100.0)
+    q2, s2 = quantize_per_row(x2)
+    np.testing.assert_array_equal(np.asarray(q1[1:]), np.asarray(q2[1:]))
+
+
+@settings(max_examples=20, deadline=None)
+@given(warmup=st.integers(1, 100), total=st.integers(200, 10_000))
+def test_cosine_schedule_bounds(warmup, total):
+    for step in (0, warmup, total // 2, total, total * 2):
+        v = float(adamw.cosine_schedule(jnp.asarray(step, jnp.int32),
+                                        warmup=warmup, total=total))
+        assert 0.0 <= v <= 1.0 + 1e-6
+    assert float(adamw.cosine_schedule(
+        jnp.asarray(warmup, jnp.int32), warmup=warmup, total=total)) > 0.9
+
+
+@settings(max_examples=10, deadline=None)
+@given(trips=st.integers(2, 40))
+def test_hlo_cost_scales_with_trip_count(trips):
+    """The while-trip scaling that cost_analysis lacks."""
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, None, length=trips)
+        return out
+
+    x = jnp.ones((8, 16))
+    w = jnp.ones((16, 16))
+    hlo = jax.jit(f).lower(x, w).compile().as_text()
+    cost = hlo_cost.analyze_hlo(hlo)
+    expect = 2 * 8 * 16 * 16 * trips
+    assert abs(cost.flops - expect) / expect < 0.05
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_grad_clip_norm_bound(seed):
+    rng = np.random.default_rng(seed)
+    g = {"a": jnp.asarray(rng.normal(size=(32,)) * 100, jnp.float32)}
+    clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+    assert float(adamw.global_norm(clipped)) <= 1.0 + 1e-5

@@ -1,0 +1,79 @@
+"""Chunked recurrences vs naive per-step oracles (Mamba2 SSD, RWKV6 WKV)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import mamba2, rwkv6
+
+
+def _r(rng, shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+@pytest.mark.parametrize("sl,chunk", [(50, 16), (64, 64), (17, 128)])
+def test_ssd_chunked_matches_ref(rng, sl, chunk):
+    B, H, P, N = 2, 3, 8, 16
+    xh = _r(rng, (B, sl, H, P))
+    dt = jnp.asarray(rng.uniform(0.01, 0.5, (B, sl, H)), jnp.float32)
+    a = -jnp.asarray(rng.uniform(0.1, 2.0, (H,)), jnp.float32)
+    Bm, Cm = _r(rng, (B, sl, N)), _r(rng, (B, sl, N))
+    y1, s1 = mamba2.ssd_chunked(xh, dt, a, Bm, Cm, chunk=chunk)
+    y2, s2 = mamba2.ssd_ref(xh, dt, a, Bm, Cm)
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(s1, s2, rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_state_continuation(rng):
+    B, H, P, N, sl = 1, 2, 8, 8, 48
+    xh = _r(rng, (B, sl, H, P))
+    dt = jnp.asarray(rng.uniform(0.01, 0.5, (B, sl, H)), jnp.float32)
+    a = -jnp.asarray(rng.uniform(0.1, 2.0, (H,)), jnp.float32)
+    Bm, Cm = _r(rng, (B, sl, N)), _r(rng, (B, sl, N))
+    y_full, s_full = mamba2.ssd_chunked(xh, dt, a, Bm, Cm, chunk=16)
+    ya, sa = mamba2.ssd_chunked(xh[:, :20], dt[:, :20], a, Bm[:, :20],
+                                Cm[:, :20], chunk=16)
+    yb, sb = mamba2.ssd_chunked(xh[:, 20:], dt[:, 20:], a, Bm[:, 20:],
+                                Cm[:, 20:], chunk=16, s0=sa)
+    np.testing.assert_allclose(jnp.concatenate([ya, yb], 1), y_full,
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(sb, s_full, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("sl", [45, 16, 7])
+def test_wkv_chunked_matches_ref(rng, sl):
+    B, H, P = 2, 2, 8
+    r = _r(rng, (B, sl, H, P))
+    k = _r(rng, (B, sl, H, P))
+    v = _r(rng, (B, sl, H, P))
+    lw = jnp.clip(-jnp.exp(_r(rng, (B, sl, H, P))), -rwkv6.CLAMP, -1e-6)
+    u = _r(rng, (H, P))
+    y1, s1 = rwkv6.wkv_chunked(r, k, v, lw, u)
+    y2, s2 = rwkv6.wkv_ref(r, k, v, lw, u)
+    np.testing.assert_allclose(y1, y2, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(s1, s2, rtol=2e-4, atol=2e-4)
+
+
+def test_wkv_state_continuation(rng):
+    B, H, P, sl = 1, 2, 8, 40
+    r, k, v = (_r(rng, (B, sl, H, P)) for _ in range(3))
+    lw = jnp.clip(-jnp.exp(_r(rng, (B, sl, H, P))), -rwkv6.CLAMP, -1e-6)
+    u = _r(rng, (H, P))
+    y_full, _ = rwkv6.wkv_ref(r, k, v, lw, u)
+    ya, sa = rwkv6.wkv_chunked(r[:, :20], k[:, :20], v[:, :20],
+                               lw[:, :20], u)
+    yb, _ = rwkv6.wkv_chunked(r[:, 20:], k[:, 20:], v[:, 20:],
+                              lw[:, 20:], u, s0=sa)
+    np.testing.assert_allclose(jnp.concatenate([ya, yb], 1), y_full,
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_wkv_decay_extremes(rng):
+    """Clamped decay boundaries stay finite and match the oracle."""
+    B, H, P, sl = 1, 1, 4, 33
+    r, k, v = (_r(rng, (B, sl, H, P)) for _ in range(3))
+    lw = jnp.full((B, sl, H, P), -rwkv6.CLAMP)
+    u = _r(rng, (H, P))
+    y1, _ = rwkv6.wkv_chunked(r, k, v, lw, u)
+    y2, _ = rwkv6.wkv_ref(r, k, v, lw, u)
+    assert bool(jnp.all(jnp.isfinite(y1)))
+    np.testing.assert_allclose(y1, y2, rtol=2e-4, atol=2e-4)

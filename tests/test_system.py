@@ -1,0 +1,90 @@
+"""End-to-end behaviour: tiny model trains (loss drops on the synthetic
+Markov language), survives a simulated preemption (checkpoint/restore
+resumes exactly), and the NaN guard skips poisoned steps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpointer as ckpt
+from repro.core.types import ModelConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import lm
+from repro.optim import adamw
+from repro.train import step as tsl
+
+
+def _tiny_cfg():
+    return ModelConfig(name="tiny", family="dense", n_layers=2,
+                       d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                       vocab=64, act="silu", norm="rms")
+
+
+def _pipeline(cfg, b=8, s=32):
+    return SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=s,
+                                  global_batch=b, seed=7))
+
+
+def test_loss_decreases():
+    cfg = _tiny_cfg()
+    params, _ = lm.init_lm(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    tcfg = tsl.TrainConfig(
+        opt=adamw.AdamWConfig(lr=3e-3), warmup_steps=5, total_steps=60,
+        remat=False)
+    state = tsl.init_state(params, tcfg)
+    step = jax.jit(tsl.make_train_step(cfg, tcfg))
+    ds = _pipeline(cfg)
+    losses = []
+    for i in range(60):
+        batch = jax.tree.map(jnp.asarray, ds.batch(i))
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    first, last = np.mean(losses[:5]), np.mean(losses[-5:])
+    # synthetic Markov stream is learnable: expect a solid drop
+    assert last < first - 0.5, (first, last)
+
+
+def test_preemption_resume_exact(tmp_path):
+    cfg = _tiny_cfg()
+    params, _ = lm.init_lm(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    tcfg = tsl.TrainConfig(warmup_steps=2, total_steps=20, remat=False)
+    step = jax.jit(tsl.make_train_step(cfg, tcfg))
+    ds = _pipeline(cfg)
+
+    # run A: 10 uninterrupted steps
+    state = tsl.init_state(params, tcfg)
+    for i in range(10):
+        state, _ = step(state, jax.tree.map(jnp.asarray, ds.batch(i)))
+    ref = state
+
+    # run B: preempted at step 6, resumed from checkpoint + data step
+    state = tsl.init_state(params, tcfg)
+    for i in range(6):
+        state, _ = step(state, jax.tree.map(jnp.asarray, ds.batch(i)))
+    ckpt.save(str(tmp_path), 6, state, extra={"data_step": 6})
+    restored, extra = ckpt.restore(str(tmp_path), 6, state)
+    for i in range(extra["data_step"], 10):
+        restored, _ = step(restored,
+                           jax.tree.map(jnp.asarray, ds.batch(i)))
+    diffs = [float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+        jax.tree.leaves(ref.params), jax.tree.leaves(restored.params))]
+    assert max(diffs) < 1e-6, max(diffs)
+
+
+def test_nan_guard_skips_bad_step():
+    cfg = _tiny_cfg()
+    params, _ = lm.init_lm(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    tcfg = tsl.TrainConfig(remat=False, skip_nonfinite=True)
+    state = tsl.init_state(params, tcfg)
+    step = jax.jit(tsl.make_train_step(cfg, tcfg))
+    ds = _pipeline(cfg)
+    good = jax.tree.map(jnp.asarray, ds.batch(0))
+    state1, m1 = step(state, good)
+    assert float(m1["skipped"]) == 0.0
+    # poison the gradient path: inf embeddings make the loss non-finite
+    bad_state = state1._replace(params={
+        **state1.params, "embed": state1.params["embed"] * jnp.inf})
+    state2, m2 = step(bad_state, good)
+    assert float(m2["skipped"]) == 1.0
+    for a, b in zip(jax.tree.leaves(bad_state.params),
+                    jax.tree.leaves(state2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,47 @@
+"""Pallas WKV6 kernel vs the naive recurrence oracle (interpret mode),
+sweeping shapes/dtypes per the brief."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.wkv import wkv_p
+from repro.models.rwkv6 import CLAMP, wkv_ref
+
+
+def _inputs(rng, b, s, h, p, dtype=jnp.float32):
+    r, k, v = (jnp.asarray(rng.normal(size=(b, s, h, p)),
+                           jnp.float32).astype(dtype) for _ in range(3))
+    lw = jnp.clip(-jnp.exp(jnp.asarray(rng.normal(size=(b, s, h, p)),
+                                       jnp.float32)), -CLAMP, -1e-6)
+    u = jnp.asarray(rng.normal(size=(h, p)), jnp.float32)
+    return r, k, v, lw, u
+
+
+@pytest.mark.parametrize("b,s,h,p", [(2, 45, 3, 16), (1, 16, 1, 8),
+                                     (2, 64, 2, 32), (1, 7, 2, 16)])
+def test_wkv_kernel_matches_ref(rng, b, s, h, p):
+    r, k, v, lw, u = _inputs(rng, b, s, h, p)
+    y1, s1 = wkv_p(r, k, v, lw, u, interpret=True)
+    y2, s2 = wkv_ref(r, k, v, lw, u)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_wkv_kernel_bf16(rng):
+    r, k, v, lw, u = _inputs(rng, 1, 32, 2, 16, jnp.bfloat16)
+    y1, _ = wkv_p(r, k, v, lw, u, interpret=True)
+    y2, _ = wkv_ref(r.astype(jnp.float32), k.astype(jnp.float32),
+                    v.astype(jnp.float32), lw, u)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2), rtol=5e-2, atol=5e-2)
+
+
+def test_wkv_kernel_chunk_sizes(rng):
+    r, k, v, lw, u = _inputs(rng, 1, 40, 2, 16)
+    y_ref, _ = wkv_ref(r, k, v, lw, u)
+    for chunk in (8, 16):
+        y, _ = wkv_p(r, k, v, lw, u, chunk=chunk, interpret=True)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=3e-4, atol=3e-4)
