@@ -7,6 +7,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.core.rowwise import plan_matmul
 from repro.kernels import ops
 
 
@@ -46,3 +47,31 @@ def kernel_suite(emit):
     us = _bench(f, x, g)
     emit("kernel.rmsnorm_4kx1k", us,
          f"{x.size * 4 * 2 / (us * 1e-6) / 1e9:.1f} GB/s")
+
+    ksplit_sweep(emit)
+
+
+def ksplit_sweep(emit, m=1024, n=1024):
+    """Before/after HBM-traffic model for the fused in-VMEM adder tree.
+
+    'before' is the seed's Python adder-tree loop: k_splits separate
+    pallas_calls whose fp32 partials are written once per split and
+    re-read (k_splits - 1) times — a (2*k_splits - 1) * M * N * 4 output
+    term. 'after' is the fused k grid axis: partials never leave VMEM,
+    outputs written exactly once. Timings use the XLA ref path (the
+    Pallas path targets TPU; interpret mode is not a perf proxy).
+    """
+    key = jax.random.PRNGKey(1)
+    for k in (1024, 4096, 16384, 65536):
+        fp = plan_matmul(m, k, n, dtype_bytes=2)
+        lp = plan_matmul(m, k, n, dtype_bytes=2, fused=False)
+        out_rt = (2 * lp.k_splits - 2) * lp.m_pad * lp.n_pad * 4
+        x = jax.random.normal(key, (m, k), jnp.bfloat16)
+        w = jax.random.normal(key, (k, n), jnp.bfloat16)
+        f = jax.jit(lambda a, b: ops.matmul(a, b, impl="ref"))
+        us = _bench(f, x, w, iters=3)
+        emit(f"kernel.ksplit_K{k}", us,
+             f"splits={fp.k_splits} bytes_fused={fp.bytes_moved} "
+             f"bytes_legacy={lp.bytes_moved} "
+             f"saved={lp.bytes_moved - fp.bytes_moved} "
+             f"out_roundtrip_removed={out_rt}")

@@ -1,0 +1,38 @@
+"""Version shims for the supported jax range (>=0.4.30).
+
+``jax.shard_map`` became a top-level API (with ``check_vma`` /
+``axis_names``) after 0.4.x; on 0.4.x the same machinery lives at
+``jax.experimental.shard_map.shard_map`` with the older ``check_rep`` /
+``auto`` spelling. Callers use this module's :func:`shard_map` with the
+new-style kwargs and run on both.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, *, axis_names=None,
+              check_vma=None):
+    """New-style ``jax.shard_map`` signature on any supported jax.
+
+    axis_names: mesh axes to shard manually (others stay GSPMD-auto);
+    None means all axes manual. check_vma: replication checking (the
+    pre-0.5 name is check_rep).
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = {}
+        if axis_names is not None:
+            kwargs["axis_names"] = frozenset(axis_names)
+        if check_vma is not None:
+            kwargs["check_vma"] = check_vma
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kwargs = {}
+    if check_vma is not None:
+        kwargs["check_rep"] = check_vma
+    if axis_names is not None:
+        kwargs["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kwargs)

@@ -10,8 +10,10 @@ dot-product primitive* on a PE array, with weights broadcast down rows
   * tile shapes are *planned* from the model's dimensions so they divide
     evenly and align to the MXU, the way the paper sizes its 12x7x4
     array to "channels are multiples of 96, spatial multiples of 7";
-  * contraction dims too large for one VMEM panel are split and summed
-    (= the paper's accumulator block + adder tree for large C_in).
+  * contraction dims too large for one VMEM panel are split along a
+    third, innermost grid axis and accumulated in a VMEM-resident fp32
+    block across the k steps (= the paper's accumulator block + adder
+    tree for large C_in) — partial sums never touch HBM.
 
 ``plan_matmul`` is the scheduler: it returns the tile plan plus the
 utilization this schedule achieves (useful MACs / occupied MAC slots),
@@ -52,17 +54,17 @@ class TilePlan:
     """A planned decomposition of an (M,K,N) matmul into row-wise tiles."""
 
     bm: int
-    bk: int                 # K panel held in VMEM per call
+    bk: int                 # K panel held in VMEM per grid step
     bn: int
-    k_splits: int           # number of adder-tree partial sums
-    grid: Tuple[int, int]   # (n_tiles_n, n_tiles_m) — m innermost
+    k_splits: int           # adder-tree depth (third grid axis)
+    grid: Tuple[int, int, int]  # (n_tiles, m_tiles, k_splits) — k innermost
     m_pad: int
     k_pad: int
     n_pad: int
     utilization: float      # useful MACs / occupied MAC-slots
-    vmem_bytes: int
+    vmem_bytes: int         # working set incl. the scratch accumulator
     flops: int
-    bytes_moved: int        # HBM traffic under weight-stationary reuse
+    bytes_moved: int        # modeled HBM traffic for this schedule
 
     @property
     def arithmetic_intensity(self) -> float:
@@ -89,16 +91,29 @@ def _pick_block(dim: int, target: int, align: int) -> int:
 def plan_matmul(m: int, k: int, n: int, *, dtype_bytes: int = 2,
                 acc_bytes: int = 4, geom: TPUGeometry = V5E,
                 target_bm: int = 256, target_bn: int = 256,
-                k_max: Optional[int] = None) -> TilePlan:
+                k_max: Optional[int] = None, fused: bool = True) -> TilePlan:
     """Plan a row-wise (weight-stationary) schedule for x(M,K) @ w(K,N).
 
-    VMEM budget per grid step: x panel (bm, bk) double-buffered +
-    w panel (bk, bn) single-resident (weight broadcast: the panel is
-    revisited by consecutive m steps, so Pallas keeps it) + fp32 out.
+    VMEM budget per grid step: x panel (bm, bk) + w panel (bk, bn), both
+    double-buffered, plus the fp32/int32 output block AND its scratch
+    accumulator (the in-kernel adder tree keeps both resident).
+
+    ``fused=False`` prices the seed's Python adder-tree loop instead
+    (outputs round-tripping HBM once per split); kept only so
+    benchmarks can report before/after traffic.
     """
     sub, lane = _MIN_TILE[dtype_bytes]
     bm = _pick_block(m, target_bm, sub)
     bn = _pick_block(n, target_bn, lane)
+
+    # The fused kernel keeps TWO (bm, bn) accumulator-width buffers
+    # resident (output block + scratch); the seed's looped kernel held
+    # only the output block, so legacy pricing must not charge scratch.
+    out_bufs = 2 if fused else 1
+
+    def _need(bm, bk, bn):
+        return ((2 * bm * bk + 2 * bk * bn) * dtype_bytes
+                + out_bufs * bm * bn * acc_bytes)
 
     # Choose the K panel: as large as fits the VMEM budget.
     budget = geom.vmem_bytes - 2 * 1024 * 1024  # headroom for semaphores etc.
@@ -106,28 +121,60 @@ def plan_matmul(m: int, k: int, n: int, *, dtype_bytes: int = 2,
         k_max = 8192
     bk = min(_round_up(k, lane), k_max)
     while True:
-        need = (2 * bm * bk + 2 * bk * bn) * dtype_bytes + bm * bn * acc_bytes
-        if need <= budget or bk <= lane:
+        if _need(bm, bk, bn) <= budget or bk <= lane:
             break
         bk = max(lane, bk // 2)
     k_splits = math.ceil(k / bk)
 
+    if fused and k_splits > 1:
+        # Fused-adder-tree regime: with k innermost, the w panel is
+        # re-fetched once per m tile and the x panel once per n tile —
+        # bk no longer buys any HBM reuse, only bm/bn do. So shrink the
+        # K panel and spend the VMEM budget on the widest (bm, bn)
+        # output block instead, minimizing both re-fetch factors.
+        bk = min(bk, 4 * lane)
+        bm = _pick_block(m, max(target_bm, 1024), sub)
+        bn = _pick_block(n, max(target_bn, 1024), lane)
+        while _need(bm, bk, bn) > budget:
+            if bm >= bn and bm > sub:
+                bm = _pick_block(m, bm // 2, sub)
+            elif bn > lane:
+                bn = _pick_block(n, bn // 2, lane)
+            elif bm > sub:
+                bm = _pick_block(m, bm // 2, sub)
+            elif bk > lane:
+                bk = max(lane, bk // 2)
+            else:
+                break
+        k_splits = math.ceil(k / bk)
+
     m_pad, k_pad, n_pad = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
-    grid = (n_pad // bn, m_pad // bm)
+    grid = (n_pad // bn, m_pad // bm, k_splits)
+    m_tiles, n_tiles = m_pad // bm, n_pad // bn
 
     useful = m * k * n
     occupied = m_pad * k_pad * n_pad
     flops = 2 * useful
-    # weight-stationary HBM traffic: weights fetched once per (n,k) panel
-    # sweep; activations re-fetched once per n-tile column; outputs written
-    # once per k split (adder tree) and re-read (k_splits - 1) times.
-    bytes_moved = (k_pad * n_pad * dtype_bytes
-                   + m_pad * k_pad * dtype_bytes * (n_pad // bn)
-                   + m_pad * n_pad * acc_bytes * (2 * k_splits - 1))
-    need = (2 * bm * bk + 2 * bk * bn) * dtype_bytes + bm * bn * acc_bytes
+    # HBM traffic. Activations are re-fetched once per n-tile column in
+    # both regimes. Weights: fetched once when the panel is stationary
+    # across m steps (k_splits == 1, index map ignores mi), once per m
+    # tile when the k axis cycles under them. Outputs: the fused adder
+    # tree accumulates in VMEM and writes each block exactly once; the
+    # legacy loop wrote fp32 partials per split and re-read them
+    # (k_splits - 1) times.
+    if fused:
+        w_factor = 1 if k_splits == 1 else m_tiles
+        out_factor = 1
+    else:
+        w_factor = 1
+        out_factor = 2 * k_splits - 1
+    bytes_moved = (k_pad * n_pad * dtype_bytes * w_factor
+                   + m_pad * k_pad * dtype_bytes * n_tiles
+                   + m_pad * n_pad * acc_bytes * out_factor)
     return TilePlan(bm=bm, bk=bk, bn=bn, k_splits=k_splits, grid=grid,
                     m_pad=m_pad, k_pad=k_pad, n_pad=n_pad,
-                    utilization=useful / occupied, vmem_bytes=need,
+                    utilization=useful / occupied,
+                    vmem_bytes=_need(bm, bk, bn),
                     flops=flops, bytes_moved=bytes_moved)
 
 

@@ -2,8 +2,10 @@
 
 Every dense op in the framework funnels through :func:`matmul` — the
 paper's "single dot-product primitive for a unified execution". The
-wrapper handles leading batch dims, MXU padding, the adder-tree split of
-oversized contractions, and impl dispatch (pallas / interpret / jnp ref).
+wrapper handles leading batch dims and impl dispatch (pallas /
+interpret / jnp ref); MXU padding and the adder-tree split of oversized
+contractions live inside the kernel's 3-D grid, so any plan is exactly
+one ``pallas_call``.
 """
 from __future__ import annotations
 
@@ -40,26 +42,13 @@ def matmul(x: jnp.ndarray, w: jnp.ndarray, *,
     interpret = impl == "interpret"
     m, k = x2.shape
     n = w.shape[1]
+    # The plan alone decides the decomposition: oversized contractions
+    # become the kernel grid's innermost k axis (in-VMEM adder tree),
+    # so every shape is exactly one pallas_call.
     plan = plan_matmul(m, k, n, dtype_bytes=x2.dtype.itemsize)
-    if plan.k_splits == 1:
-        out = rowwise_matmul_p(x2, w, bias=bias, activation=activation,
-                               out_dtype=out_dtype, plan=plan,
-                               interpret=interpret)
-    else:
-        # Adder tree: split the contraction into VMEM-sized panels,
-        # accumulate partial products in fp32, epilogue once at the end.
-        bk = plan.bk
-        acc = None
-        for s in range(plan.k_splits):
-            xs = x2[:, s * bk:(s + 1) * bk]
-            ws = w[s * bk:(s + 1) * bk]
-            part = rowwise_matmul_p(xs, ws, out_dtype=jnp.float32,
-                                    interpret=interpret)
-            acc = part if acc is None else acc + part
-        if bias is not None:
-            acc = acc + bias.astype(jnp.float32)
-        acc = ref._ACTS[activation](acc)
-        out = acc.astype(out_dtype or x2.dtype)
+    out = rowwise_matmul_p(x2, w, bias=bias, activation=activation,
+                           out_dtype=out_dtype, plan=plan,
+                           interpret=interpret)
     return out.reshape(*lead, n)
 
 

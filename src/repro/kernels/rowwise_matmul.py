@@ -2,20 +2,22 @@
 
 Mapping of the paper's ASIC dataflow onto TPU (see DESIGN.md §2):
 
-  * **Weight broadcast / weight-stationary.** The grid is ``(n_tiles_n,
-    n_tiles_m)`` with the *m* (activation-row) axis innermost. The weight
-    panel's index map depends only on *n*, so consecutive grid steps
+  * **Weight broadcast / weight-stationary.** The grid is ``(n_tiles,
+    m_tiles, k_splits)``. For a single-panel contraction the weight
+    panel's index map depends only on *n*, so consecutive *m* steps
     revisit the same weight block and Pallas keeps it resident in VMEM —
     the TPU equivalent of broadcasting one weight down all 7 PE rows.
-  * **Row-wise streaming.** Activation row panels ``(bm, K)`` stream past
-    the stationary weight panel, one per grid step, exactly like input
-    rows streaming through the PE block.
-  * **Accumulator / adder tree.** The contraction runs over the whole
-    VMEM-resident K panel with an fp32 (int32 for int8) accumulator;
-    contractions too large for VMEM are split by the wrapper in
-    ``ops.py`` and summed — the paper's adder tree for large C_in.
-  * **Post-processing unit.** Bias + activation (+ int8 dequant) are
-    fused as the kernel epilogue.
+  * **Row-wise streaming.** Activation row panels ``(bm, bk)`` stream
+    past the weight panel, one per grid step, exactly like input rows
+    streaming through the PE block.
+  * **Accumulator / adder tree.** Contractions too large for one VMEM
+    panel run over the *innermost* ``k_splits`` grid axis: each step
+    multiplies a ``(bm, bk) @ (bk, bn)`` panel pair and adds it into an
+    fp32 (int32 for int8) VMEM scratch accumulator. The output block's
+    index map ignores the k axis, so partial sums stay on-chip for the
+    whole tree — one ``pallas_call``, no HBM round-trips.
+  * **Post-processing unit.** Bias + activation (+ int8 dequant) run as
+    the kernel epilogue, predicated on the *final* k step only.
 
 Supports bf16/fp32 and the paper's 8-bit W/A mode (int8 x int8 -> int32
 accumulation with per-row activation scales and per-channel weight
@@ -29,6 +31,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.rowwise import TilePlan, plan_matmul
 
@@ -41,37 +44,40 @@ _ACTIVATIONS = {
 }
 
 
-def _kernel(x_ref, w_ref, o_ref, *, activation: Optional[str]):
-    """Float path: (bm, K) @ (K, bn) with fp32 accumulation."""
-    acc = jnp.dot(x_ref[...], w_ref[...],
-                  preferred_element_type=jnp.float32)
-    o_ref[...] = _ACTIVATIONS[activation](acc).astype(o_ref.dtype)
+def _fused_kernel(*refs, activation: Optional[str], int8: bool,
+                  with_bias: bool):
+    """One body for all four variants (float/int8 × bias/no-bias).
 
+    refs: x, w, [x_scale, w_scale], [bias], out, acc_scratch. Zero the
+    scratch on the first k step, accumulate a (bm, bk) @ (bk, bn) panel
+    product every step (fp32, exact int32 for int8), and run the
+    post-processing epilogue only on the final k step.
+    """
+    x_ref, w_ref = refs[:2]
+    o_ref, acc_ref = refs[-2:]
+    ki = pl.program_id(2)
 
-def _kernel_bias(x_ref, w_ref, b_ref, o_ref, *, activation: Optional[str]):
-    acc = jnp.dot(x_ref[...], w_ref[...],
-                  preferred_element_type=jnp.float32)
-    acc = acc + b_ref[...].astype(jnp.float32)
-    o_ref[...] = _ACTIVATIONS[activation](acc).astype(o_ref.dtype)
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    if int8:
+        acc_ref[...] += jax.lax.dot_general(
+            x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+    else:
+        acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                                preferred_element_type=jnp.float32)
 
-def _kernel_int8(x_ref, w_ref, xs_ref, ws_ref, o_ref, *,
-                 activation: Optional[str], with_bias: bool, b_ref=None):
-    acc = jax.lax.dot_general(
-        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32)
-    out = acc.astype(jnp.float32) * xs_ref[...] * ws_ref[...]
-    o_ref[...] = _ACTIVATIONS[activation](out).astype(o_ref.dtype)
-
-
-def _kernel_int8_bias(x_ref, w_ref, xs_ref, ws_ref, b_ref, o_ref, *,
-                      activation: Optional[str]):
-    acc = jax.lax.dot_general(
-        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32)
-    out = acc.astype(jnp.float32) * xs_ref[...] * ws_ref[...]
-    out = out + b_ref[...].astype(jnp.float32)
-    o_ref[...] = _ACTIVATIONS[activation](out).astype(o_ref.dtype)
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _epilogue():
+        out = acc_ref[...]
+        if int8:
+            xs_ref, ws_ref = refs[2], refs[3]
+            out = out.astype(jnp.float32) * xs_ref[...] * ws_ref[...]
+        if with_bias:
+            out = out + refs[-3][...].astype(jnp.float32)
+        o_ref[...] = _ACTIVATIONS[activation](out).astype(o_ref.dtype)
 
 
 def _pad2(x, m, n):
@@ -89,7 +95,7 @@ def rowwise_matmul_p(x: jnp.ndarray, w: jnp.ndarray, *,
                      out_dtype=None,
                      plan: Optional[TilePlan] = None,
                      interpret: bool = False) -> jnp.ndarray:
-    """One pallas_call over a K panel that fits VMEM (K <= plan.bk).
+    """One pallas_call over the whole contraction, any ``k_splits``.
 
     x: (M, K); w: (K, N); bias: (N,) optional.
     int8 mode when x_scale/w_scale given: x,w int8; scales fp32
@@ -104,52 +110,42 @@ def rowwise_matmul_p(x: jnp.ndarray, w: jnp.ndarray, *,
     assert k <= plan.bk * plan.k_splits
     out_dtype = out_dtype or (jnp.float32 if int8_mode else x.dtype)
 
-    bm, bn = plan.bm, plan.bn
+    bm, bk, bn = plan.bm, plan.bk, plan.bn
     mp, np_, kp = plan.m_pad, plan.n_pad, plan.k_pad
     x = _pad2(x, mp, kp)
     w = _pad2(w, kp, np_)
-    grid = (np_ // bn, mp // bm)  # m innermost => weight panel stationary
+    # k innermost: the output block's index map ignores ki, so Pallas
+    # holds it (plus the scratch accumulator) in VMEM across the tree.
+    grid = (np_ // bn, mp // bm, plan.k_splits)
 
-    x_spec = pl.BlockSpec((bm, kp), lambda ni, mi: (mi, 0))
-    w_spec = pl.BlockSpec((kp, bn), lambda ni, mi: (0, ni))
-    o_spec = pl.BlockSpec((bm, bn), lambda ni, mi: (mi, ni))
+    x_spec = pl.BlockSpec((bm, bk), lambda ni, mi, ki: (mi, ki))
+    w_spec = pl.BlockSpec((bk, bn), lambda ni, mi, ki: (ki, ni))
+    o_spec = pl.BlockSpec((bm, bn), lambda ni, mi, ki: (mi, ni))
     out_shape = jax.ShapeDtypeStruct((mp, np_), out_dtype)
+    acc_dtype = jnp.int32 if int8_mode else jnp.float32
+    # n/m tiles are independent; only the k axis carries the accumulator.
+    params = dict(
+        grid=grid, out_specs=o_spec, out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
+        interpret=interpret)
+    if not interpret:
+        params["compiler_params"] = pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
 
+    inputs = [x, w]
+    in_specs = [x_spec, w_spec]
     if int8_mode:
-        xs = _pad2(x_scale.astype(jnp.float32), mp, 1)
-        ws = _pad2(w_scale.astype(jnp.float32), 1, np_)
-        xs_spec = pl.BlockSpec((bm, 1), lambda ni, mi: (mi, 0))
-        ws_spec = pl.BlockSpec((1, bn), lambda ni, mi: (0, ni))
-        if bias is not None:
-            b = _pad2(bias.reshape(1, -1), 1, np_)
-            fn = pl.pallas_call(
-                functools.partial(_kernel_int8_bias, activation=activation),
-                grid=grid,
-                in_specs=[x_spec, w_spec, xs_spec, ws_spec,
-                          pl.BlockSpec((1, bn), lambda ni, mi: (0, ni))],
-                out_specs=o_spec, out_shape=out_shape, interpret=interpret)
-            out = fn(x, w, xs, ws, b)
-        else:
-            fn = pl.pallas_call(
-                functools.partial(_kernel_int8, activation=activation,
-                                  with_bias=False),
-                grid=grid,
-                in_specs=[x_spec, w_spec, xs_spec, ws_spec],
-                out_specs=o_spec, out_shape=out_shape, interpret=interpret)
-            out = fn(x, w, xs, ws)
-    elif bias is not None:
-        b = _pad2(bias.reshape(1, -1).astype(jnp.float32), 1, np_)
-        fn = pl.pallas_call(
-            functools.partial(_kernel_bias, activation=activation),
-            grid=grid,
-            in_specs=[x_spec, w_spec,
-                      pl.BlockSpec((1, bn), lambda ni, mi: (0, ni))],
-            out_specs=o_spec, out_shape=out_shape, interpret=interpret)
-        out = fn(x, w, b)
-    else:
-        fn = pl.pallas_call(
-            functools.partial(_kernel, activation=activation),
-            grid=grid, in_specs=[x_spec, w_spec],
-            out_specs=o_spec, out_shape=out_shape, interpret=interpret)
-        out = fn(x, w)
-    return out[:m, :n]
+        inputs += [_pad2(x_scale.astype(jnp.float32), mp, 1),
+                   _pad2(w_scale.astype(jnp.float32), 1, np_)]
+        in_specs += [pl.BlockSpec((bm, 1), lambda ni, mi, ki: (mi, 0)),
+                     pl.BlockSpec((1, bn), lambda ni, mi, ki: (0, ni))]
+    if bias is not None:
+        inputs.append(_pad2(bias.reshape(1, -1).astype(jnp.float32),
+                            1, np_))
+        in_specs.append(pl.BlockSpec((1, bn), lambda ni, mi, ki: (0, ni)))
+
+    fn = pl.pallas_call(
+        functools.partial(_fused_kernel, activation=activation,
+                          int8=int8_mode, with_bias=bias is not None),
+        in_specs=in_specs, **params)
+    return fn(*inputs)[:m, :n]

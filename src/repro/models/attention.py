@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import runtime
+from repro.core import compat
 from repro.core.partitioning import logical_constraint
 from repro.core.types import ModelConfig
 from repro.kernels import ops
@@ -427,7 +428,7 @@ def _decode_seq_sharded(q, k_new, v_new, cache: KVCache, lengths, *,
 
     out_spec = r(("batch", None, "kv_heads"), mesh,
                  shape=(b, 1, hq * hd))
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         body, mesh=mesh,
         in_specs=(q_spec, new_spec, new_spec, cache_spec, cache_spec,
                   len_spec),

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import partitioning
+from repro.core import compat
 from repro.core.types import ModelConfig
 from repro.kernels import ops
 
@@ -217,7 +218,7 @@ def _apply_ep(params, x, *, cfg: ModelConfig, mesh):
         aux = (mo.n_experts * jnp.sum(f_e * p_e) * mo.router_aux_coef)
         return out.reshape(bl, sl, d).astype(xl.dtype), aux
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         body, mesh=mesh,
         in_specs=(x_spec, rep, wi_spec, wi_spec, wo_spec,
                   {k: rep for k in shared}),

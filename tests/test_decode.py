@@ -9,6 +9,8 @@ import pytest
 from repro.configs import REDUCED
 from repro.models import lm
 
+pytestmark = pytest.mark.slow  # full prefill+decode per arch, minutes on CPU
+
 CASES = ["deepseek-7b", "gemma3-27b", "zamba2-1.2b", "rwkv6-3b",
          "qwen2-vl-2b", "whisper-base", "granite-20b", "internlm2-20b"]
 

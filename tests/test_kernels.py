@@ -9,7 +9,9 @@ import numpy as np
 import pytest
 
 from repro.core.quant import quantize_per_channel, quantize_per_row
+from repro.core.rowwise import plan_matmul
 from repro.kernels import ops, ref
+from repro.kernels.rowwise_matmul import rowwise_matmul_p
 
 jax.config.update("jax_enable_x64", False)
 
@@ -43,12 +45,65 @@ def test_rowwise_matmul_epilogue(rng, activation):
 
 
 def test_adder_tree_large_k(rng):
-    """K > VMEM panel: the wrapper splits and accumulates (Sec. IV-D)."""
+    """K > VMEM panel: the kernel's k grid axis accumulates (Sec. IV-D)."""
     x, w = _rand(rng, (16, 9000)), _rand(rng, (9000, 64))
     got = ops.matmul(x, w, impl="interpret")
     want = ref.matmul_ref(x, w)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-4, atol=2e-3)
+
+
+def test_adder_tree_single_pallas_call(rng):
+    """k_splits > 1 must fuse into ONE pallas_call — no Python loop of
+    partial-sum kernels round-tripping fp32 partials through HBM."""
+    x, w = _rand(rng, (16, 9000)), _rand(rng, (9000, 64))
+    plan = plan_matmul(16, 9000, 64, dtype_bytes=4)
+    assert plan.k_splits > 1
+    jaxpr = jax.make_jaxpr(
+        lambda a, b: ops.matmul(a, b, impl="interpret"))(x, w)
+    text = str(jaxpr)
+    assert text.count("pallas_call") == 1, text
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bias,activation", [(False, None), (True, None),
+                                             (True, "gelu"),
+                                             (False, "relu")])
+@pytest.mark.parametrize("k", [256, 300, 777])
+def test_fused_ksplit_parity(rng, dtype, bias, activation, k):
+    """Forced k_splits > 1 (tiny k_max) vs ref, incl. K % bk != 0."""
+    m, n = 24, 128
+    x, w = _rand(rng, (m, k), dtype), _rand(rng, (k, n), dtype)
+    b = _rand(rng, (n,)) if bias else None
+    plan = plan_matmul(m, k, n, dtype_bytes=x.dtype.itemsize, k_max=128)
+    assert plan.k_splits > 1 and plan.grid[2] == plan.k_splits
+    got = rowwise_matmul_p(x, w, bias=b, activation=activation,
+                           plan=plan, interpret=True)
+    want = ref.matmul_ref(x, w, bias=b, activation=activation)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * 8)
+
+
+@pytest.mark.parametrize("bias", [False, True])
+@pytest.mark.parametrize("k", [256, 391])
+def test_fused_ksplit_int8(rng, bias, k):
+    """int8 adder tree: int32 partials accumulate exactly across the k
+    axis, dequant (+bias) epilogue fires once on the last step."""
+    m, n = 33, 64
+    x, w = _rand(rng, (m, k)), _rand(rng, (k, n))
+    xq, xs = quantize_per_row(x)
+    wq, ws = quantize_per_channel(w)
+    b = _rand(rng, (n,)) if bias else None
+    plan = plan_matmul(m, k, n, dtype_bytes=1, k_max=128)
+    assert plan.k_splits > 1
+    got = rowwise_matmul_p(xq, wq, x_scale=xs.reshape(-1, 1), w_scale=ws,
+                           bias=b, activation=None, plan=plan,
+                           interpret=True)
+    want = ref.matmul_int8_ref(xq, wq, xs.reshape(-1, 1), ws, bias=b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
 
 
 def test_int8_matmul(rng):

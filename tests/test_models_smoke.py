@@ -9,6 +9,8 @@ from repro.configs.swin_t import ViTConfig, reduced as swin_reduced
 from repro.models import lm, vision
 from repro.train import step as train_step_lib
 
+pytestmark = pytest.mark.slow  # per-arch init + jit, ~2 min total on CPU
+
 ARCH_IDS = sorted(REDUCED)
 
 

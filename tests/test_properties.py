@@ -2,6 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed (fast tier) — property tests skipped")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.quant import (dequantize, quantize_per_channel,
@@ -22,12 +27,14 @@ def test_plan_matmul_invariants(m, k, n, dtype_bytes):
     assert p.m_pad % p.bm == 0 and p.n_pad % p.bn == 0
     assert p.m_pad >= m and p.n_pad >= n and p.k_pad >= k
     assert p.k_splits * p.bk >= k
+    # the fused adder tree needs the k axis to tile K exactly
+    assert p.k_pad == p.k_splits * p.bk
     # utilization = useful / padded is a true fraction
     assert 0.0 < p.utilization <= 1.0
     # claimed working set fits VMEM
     assert p.vmem_bytes <= V5E.vmem_bytes
-    # grid covers the padded output exactly
-    assert p.grid == (p.n_pad // p.bn, p.m_pad // p.bm)
+    # grid covers the padded output exactly, k innermost
+    assert p.grid == (p.n_pad // p.bn, p.m_pad // p.bm, p.k_splits)
     # flops are exactly 2*m*k*n (no phantom work in the plan)
     assert p.flops == 2 * m * k * n
 

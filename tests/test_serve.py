@@ -1,11 +1,14 @@
 """Serving engine: continuous batching equals manual greedy decoding."""
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.configs import REDUCED
 from repro.models import lm
 from repro.serve import sampling
 from repro.serve.engine import Engine, Request
+
+pytestmark = pytest.mark.slow  # engine decode loops, ~20s+ on CPU
 
 
 def _manual_greedy(params, cfg, prompt, n_new, max_len):

@@ -4,6 +4,7 @@ resumes exactly), and the NaN guard skips poisoned steps."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.checkpoint import checkpointer as ckpt
 from repro.core.types import ModelConfig
@@ -11,6 +12,8 @@ from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import lm
 from repro.optim import adamw
 from repro.train import step as tsl
+
+pytestmark = pytest.mark.slow  # end-to-end training loops
 
 
 def _tiny_cfg():
