@@ -1,0 +1,133 @@
+"""PR 2 bench: block-forward HBM traffic + wall time, fused vs unfused.
+
+Emits ``bench.block.*`` CSV rows and writes ``BENCH_PR2.json`` (uploaded
+as a CI artifact) with three sections:
+
+  * ``traffic``      — modeled bytes for one Swin-T block per stage,
+                       fused pipeline vs the seed's per-op composition
+                       (``core/block_traffic.py``).
+  * ``wall_us``      — measured wall time of the reduced-Swin forward,
+                       fused vs unfused, on this host's default impl.
+  * ``pallas_calls`` — kernel launches per attn+MLP sublayer pair from
+                       the traced jaxpr (interpret impl), fused vs
+                       unfused; "dense_pipeline" excludes the
+                       attention-core kernel (present once in both).
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.swin_t import reduced as swin_reduced
+from repro.core import runtime
+from repro.core.block_traffic import swin_block_traffic, swin_t_stage_cases
+from repro.core.types import BlockDef, ModelConfig
+from repro.models import blocks, vision
+
+
+def _traffic():
+    out = {}
+    for name, kw in swin_t_stage_cases().items():
+        for shifted in (False, True):
+            key = f"swin_t_{name}" + ("_shifted" if shifted else "")
+            tf = swin_block_traffic(**kw, shifted=shifted, fused=True)
+            tu = swin_block_traffic(**kw, shifted=shifted, fused=False)
+            out[key] = {
+                "fused_bytes": tf["total"],
+                "unfused_bytes": tu["total"],
+                "ratio": tu["total"] / tf["total"],
+                "fused_ops": dict(tf["ops"]),
+                "unfused_ops": dict(tu["ops"]),
+            }
+    return out
+
+
+def _wall_us(iters: int = 3):
+    cfg = swin_reduced()
+    key = jax.random.PRNGKey(0)
+    params = vision.init_swin(key, cfg)
+    img = jax.random.normal(key, (2, cfg.img_size, cfg.img_size, 3),
+                            jnp.float32)
+    # Record the impl: on CPU hosts this resolves to 'ref' (pure XLA
+    # compositions both ways), so the wall numbers measure trace/compile
+    # structure, not kernel fusion — the traffic model is the perf
+    # evidence there.
+    out = {"impl": runtime.resolve_impl()}
+    for fused in (True, False):
+        with runtime.use_pipeline_fusion(fused):
+            fn = jax.jit(lambda p, im: vision.swin_forward(p, im, cfg))
+            jax.block_until_ready(fn(params, img))
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                jax.block_until_ready(fn(params, img))
+            out["fused" if fused else "unfused"] = (
+                (time.perf_counter() - t0) / iters * 1e6)
+    return out
+
+
+def sublayer_pallas_calls(fused: bool) -> int:
+    """Kernel launches for one attn + gated-MLP sublayer pair, counted
+    from the traced jaxpr (interpret impl, no execution). Shared by the
+    BENCH_PR2 artifact and the acceptance test — the count includes the
+    attention-core kernel (subtract 1 for the dense pipeline alone)."""
+    cfg = ModelConfig(name="bench", family="dense", n_layers=1, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+                      act="silu", norm="rms")
+    blk = BlockDef(mixer="attn", ffn="mlp")
+    key = jax.random.PRNGKey(0)
+    params, _ = blocks.init_block(key, blk, cfg, None, jnp.float32)
+    x = jnp.zeros((2, 16, 64), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(16), (2, 16))
+    with runtime.use_impl("interpret"), runtime.use_pipeline_fusion(fused):
+        jaxpr = jax.make_jaxpr(lambda p, a: blocks.apply_block(
+            blk, p, a, cfg=cfg, mode="train", positions=pos)[0])(params, x)
+    return str(jaxpr).count("pallas_call")
+
+
+def _pallas_calls():
+    out = {}
+    for fused in (True, False):
+        total = sublayer_pallas_calls(fused)
+        tag = "fused" if fused else "unfused"
+        out[f"{tag}_total"] = total
+        out[f"{tag}_dense_pipeline"] = total - 1       # minus attn core
+    return out
+
+
+def block_bench(emit, json_path=None):
+    traffic = _traffic()
+    for key, row in traffic.items():
+        emit(f"bench.block.{key}", 0,
+             f"fused={row['fused_bytes']} unfused={row['unfused_bytes']} "
+             f"ratio={row['ratio']:.3f}")
+    wall = _wall_us()
+    emit("bench.block.swin_reduced_fused", wall["fused"], "wall us")
+    emit("bench.block.swin_reduced_unfused", wall["unfused"], "wall us")
+    calls = _pallas_calls()
+    emit("bench.block.pallas_calls", 0,
+         f"fused={calls['fused_total']} unfused={calls['unfused_total']} "
+         f"dense_pipeline {calls['fused_dense_pipeline']}"
+         f"<-{calls['unfused_dense_pipeline']}")
+    result = {"traffic": traffic, "wall_us": wall, "pallas_calls": calls}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(result, f, indent=2)
+    return result
+
+
+def main():
+    json_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_PR2.json"
+
+    def emit(name, us, derived):
+        print(f"{name},{us:.1f},{derived}")
+
+    block_bench(emit, json_path=json_path)
+    print(f"wrote {json_path}")
+
+
+if __name__ == "__main__":
+    main()

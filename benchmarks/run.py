@@ -1,6 +1,7 @@
 """Benchmark harness: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows and writes the PR 2
+block-pipeline artifact (BENCH_PR2.json).
 """
 from __future__ import annotations
 
@@ -8,6 +9,7 @@ import sys
 
 
 def main() -> None:
+    from benchmarks.block_bench import block_bench
     from benchmarks.kernel_bench import kernel_suite
     from benchmarks.paper_tables import ALL
     from benchmarks.roofline_report import roofline_report
@@ -23,6 +25,7 @@ def main() -> None:
         bench(emit)
     kernel_suite(emit)
     roofline_report(emit)
+    block_bench(emit, json_path="BENCH_PR2.json")
     sys.stdout.flush()
 
 

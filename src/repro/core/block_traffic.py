@@ -1,0 +1,104 @@
+"""Model-level HBM-traffic accounting for one transformer block forward.
+
+``plan_matmul`` prices a single kernel launch; this module walks a whole
+Swin block — pre-norms, q/k/v + output projections, window attention,
+MLP, residual adds — and sums the modeled traffic for the two execution
+regimes the runtime supports:
+
+  * ``fused=False`` — the seed's per-op pipeline: every intermediate
+    (normed activations, per-projection outputs, dense window scores,
+    residual sums) round-trips HBM between kernels; residual adds and
+    the gating multiply are standalone XLA elementwise passes (read a,
+    read b, write out).
+  * ``fused=True``  — the PR 2 pipeline (DESIGN.md §3): pre-norm as the
+    matmul prologue, wq|wk|wv wide-N, residual adds in epilogues, and
+    flash window attention with a streamed score-bias operand instead
+    of dense materialized scores.
+
+Both regimes price each matmul with today's fused in-kernel adder tree
+(PR 1) and the real output dtype, so the delta isolates the *inter-op*
+traffic this PR removes. Used by ``benchmarks/block_bench.py`` (the
+BENCH_PR2.json artifact) and the acceptance test.
+"""
+from __future__ import annotations
+
+from repro.core.rowwise import plan_matmul
+
+FP32 = 4
+
+
+def _mm(m: int, k: int, n: int, db: int, **kw) -> int:
+    return plan_matmul(m, k, n, dtype_bytes=db, out_bytes=db,
+                       **kw).bytes_moved
+
+
+def _norm_io(m: int, d: int, db: int) -> int:
+    """Standalone norm kernel: read + write the row panel, gamma/beta."""
+    return 2 * m * d * db + 2 * d * FP32
+
+
+def _ew_add_io(m: int, d: int, db: int) -> int:
+    """XLA residual add: read both operands, write the sum."""
+    return 3 * m * d * db
+
+
+def swin_block_traffic(*, grid_h: int, grid_w: int, c: int, heads: int,
+                       window: int = 7, mlp_ratio: float = 4.0,
+                       dtype_bytes: int = 2, batch: int = 1,
+                       shifted: bool = False, fused: bool = True) -> dict:
+    """Modeled HBM bytes for one Swin block forward at feature-map size
+    (grid_h, grid_w) with C channels. Returns {"ops": [(name, bytes)],
+    "total": int}."""
+    db = dtype_bytes
+    m = batch * grid_h * grid_w                 # activation rows
+    t = window * window                         # tokens per window
+    n_win = batch * (grid_h // window) * (grid_w // window)
+    f = int(mlp_ratio * c)
+    score = n_win * heads * t * t * FP32        # one dense score pass
+    qkv_io = 3 * m * c * db                     # q, k, v head-layout reads
+    ops = []
+
+    if fused:
+        ops.append(("ln1+qkv(wide-N)",
+                    _mm(m, c, 3 * c, db, prologue=True, wide_n=True)))
+        # Flash window attention: q/k/v stream once, the score bias
+        # streams as an operand, the S x S matrix never exists in HBM.
+        if shifted:
+            # per-window bias (rel + shift mask): constructed once per
+            # forward (write + mask read), re-fetched per (window, head)
+            nw_img = n_win // batch
+            bias = (nw_img * heads * t * t * FP32          # construct
+                    + nw_img * t * t * FP32                # mask read
+                    + score)                               # kernel fetch
+        else:
+            # broadcast bias: head-major grid keeps it VMEM-resident,
+            # fetched once per head
+            bias = heads * t * t * FP32
+        ops.append(("flash-attn+bias", qkv_io + bias + m * c * db))
+        ops.append(("proj+residual", _mm(m, c, c, db, residual=True)))
+        ops.append(("ln2+mlp1+gelu",
+                    _mm(m, c, f, db, prologue=True, wide_n=True)))
+        ops.append(("mlp2+residual", _mm(m, f, c, db, residual=True)))
+    else:
+        ops.append(("ln1", _norm_io(m, c, db)))
+        ops.append(("qkv", _mm(m, c, 3 * c, db)))
+        # Dense windowed attention: write scores, read-modify-write for
+        # bias+mask+softmax (one fused XLA pass), read probs for p@v.
+        ops.append(("dense-attn", qkv_io + 4 * score + m * c * db))
+        ops.append(("proj", _mm(m, c, c, db)))
+        ops.append(("residual1", _ew_add_io(m, c, db)))
+        ops.append(("ln2", _norm_io(m, c, db)))
+        ops.append(("mlp1+gelu", _mm(m, c, f, db)))
+        ops.append(("mlp2", _mm(m, f, c, db)))
+        ops.append(("residual2", _ew_add_io(m, c, db)))
+
+    return {"ops": ops, "total": sum(b for _, b in ops)}
+
+
+def swin_t_stage_cases(batch: int = 1) -> dict:
+    """The Swin-T (224x224) per-stage block geometries."""
+    return {
+        "stage1": dict(grid_h=56, grid_w=56, c=96, heads=3, batch=batch),
+        "stage2": dict(grid_h=28, grid_w=28, c=192, heads=6, batch=batch),
+        "stage3": dict(grid_h=14, grid_w=14, c=384, heads=12, batch=batch),
+    }

@@ -91,35 +91,78 @@ def _pick_block(dim: int, target: int, align: int) -> int:
 def plan_matmul(m: int, k: int, n: int, *, dtype_bytes: int = 2,
                 acc_bytes: int = 4, geom: TPUGeometry = V5E,
                 target_bm: int = 256, target_bn: int = 256,
-                k_max: Optional[int] = None, fused: bool = True) -> TilePlan:
+                k_max: Optional[int] = None, fused: bool = True,
+                n_weights: int = 1, residual: bool = False,
+                res_bytes: Optional[int] = None,
+                prologue: bool = False, wide_n: bool = False,
+                out_bytes: Optional[int] = None) -> TilePlan:
     """Plan a row-wise (weight-stationary) schedule for x(M,K) @ w(K,N).
 
-    VMEM budget per grid step: x panel (bm, bk) + w panel (bk, bn), both
-    double-buffered, plus the fp32/int32 output block AND its scratch
-    accumulator (the in-kernel adder tree keeps both resident).
+    VMEM budget per grid step: x panel (bm, bk) + w panel(s) (bk, bn),
+    both double-buffered, plus the fp32/int32 output block AND its
+    scratch accumulator(s) (the in-kernel adder tree keeps both
+    resident).
+
+    Pipeline-fusion knobs (PR 2, see DESIGN.md §3):
+
+      * ``n_weights``   — weight operands sharing the x panel (2 for the
+                          gated gate|up kernel): charges extra w panels,
+                          an extra scratch accumulator, and n_weights x
+                          the weight HBM term.
+      * ``residual``    — an extra (bm, bn) input operand read once,
+                          priced at ``res_bytes`` (defaults to
+                          ``dtype_bytes``; pass the residual's real
+                          itemsize when it differs, e.g. an fp32
+                          residual on the int8 path).
+      * ``prologue``    — in-kernel norm: gamma/beta row operands. The
+                          prologue needs the full K row per step, so
+                          callers must check ``k_splits == 1`` and fall
+                          back to a separate norm kernel otherwise.
+      * ``wide_n``      — raise the bn target toward the whole (padded)
+                          N so one activation row panel feeds every
+                          fused projection (the paper's column weight
+                          sharing lifted to the qkv / gate|up level).
+      * ``out_bytes``   — price the single fused output write at the
+                          real output dtype instead of ``acc_bytes``
+                          (the legacy ``fused=False`` loop keeps fp32
+                          pricing: its partials really are fp32).
 
     ``fused=False`` prices the seed's Python adder-tree loop instead
     (outputs round-tripping HBM once per split); kept only so
     benchmarks can report before/after traffic.
     """
     sub, lane = _MIN_TILE[dtype_bytes]
+    rb = dtype_bytes if res_bytes is None else res_bytes
+    if wide_n:
+        target_bn = max(target_bn, min(2048, _round_up(n, lane)))
     bm = _pick_block(m, target_bm, sub)
     bn = _pick_block(n, target_bn, lane)
 
-    # The fused kernel keeps TWO (bm, bn) accumulator-width buffers
-    # resident (output block + scratch); the seed's looped kernel held
-    # only the output block, so legacy pricing must not charge scratch.
-    out_bufs = 2 if fused else 1
+    # The fused kernel keeps 1 + n_weights (bm, bn) accumulator-width
+    # buffers resident (output block + one scratch per weight); the
+    # seed's looped kernel held only the output block, so legacy pricing
+    # must not charge scratch.
+    out_bufs = (1 + n_weights) if fused else 1
 
     def _need(bm, bk, bn):
-        return ((2 * bm * bk + 2 * bk * bn) * dtype_bytes
+        need = ((2 * bm * bk + n_weights * 2 * bk * bn) * dtype_bytes
                 + out_bufs * bm * bn * acc_bytes)
+        if residual:
+            need += 2 * bm * bn * rb
+        if prologue:
+            need += 2 * 2 * bk * 4          # gamma/beta fp32 rows
+        return need
 
     # Choose the K panel: as large as fits the VMEM budget.
     budget = geom.vmem_bytes - 2 * 1024 * 1024  # headroom for semaphores etc.
     if k_max is None:
         k_max = 8192
     bk = min(_round_up(k, lane), k_max)
+    # A wide-N target can blow the budget on its own; give N back first
+    # (down to the default 256) before shrinking the K panel, so the
+    # prologue's full-K requirement survives whenever it can.
+    while _need(bm, bk, bn) > budget and bn > 256:
+        bn = _pick_block(n, max(bn // 2, 256), lane)
     while True:
         if _need(bm, bk, bn) <= budget or bk <= lane:
             break
@@ -164,13 +207,21 @@ def plan_matmul(m: int, k: int, n: int, *, dtype_bytes: int = 2,
     # (k_splits - 1) times.
     if fused:
         w_factor = 1 if k_splits == 1 else m_tiles
-        out_factor = 1
+        out_term = m_pad * n_pad * (acc_bytes if out_bytes is None
+                                    else out_bytes)
     else:
+        # Seed pricing: fp32 partials written once per split and re-read
+        # (k_splits - 1) times — always at acc_bytes, whatever the
+        # output dtype.
         w_factor = 1
-        out_factor = 2 * k_splits - 1
-    bytes_moved = (k_pad * n_pad * dtype_bytes * w_factor
+        out_term = m_pad * n_pad * acc_bytes * (2 * k_splits - 1)
+    bytes_moved = (k_pad * n_pad * dtype_bytes * w_factor * n_weights
                    + m_pad * k_pad * dtype_bytes * n_tiles
-                   + m_pad * n_pad * acc_bytes * out_factor)
+                   + out_term)
+    if residual:
+        bytes_moved += m_pad * n_pad * rb
+    if prologue:
+        bytes_moved += 2 * k_pad * 4
     return TilePlan(bm=bm, bk=bk, bn=bn, k_splits=k_splits, grid=grid,
                     m_pad=m_pad, k_pad=k_pad, n_pad=n_pad,
                     utilization=useful / occupied,

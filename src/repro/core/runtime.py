@@ -6,6 +6,13 @@
   * 'interpret' — Pallas kernels in interpret mode (CPU correctness runs)
 
 Selected process-wide (launcher flag) or via context manager in tests.
+
+Also owns the **pipeline-fusion** switch (PR 2): when on (default), the
+models fuse the pre-norm prologue, multi-head projections and
+residual/gating epilogues into single row-wise kernel launches; when
+off they compose the per-op kernels the way the seed did. The off path
+exists so benchmarks can report before/after launch counts and HBM
+traffic for the same weights.
 """
 from __future__ import annotations
 
@@ -14,6 +21,7 @@ import contextlib
 import jax
 
 _IMPL = "auto"
+_FUSE_PIPELINE = True
 
 
 def resolve_impl() -> str:
@@ -38,3 +46,23 @@ def use_impl(impl: str):
         yield
     finally:
         _IMPL = prev
+
+
+def pipeline_fusion() -> bool:
+    return _FUSE_PIPELINE
+
+
+def set_pipeline_fusion(on: bool) -> None:
+    global _FUSE_PIPELINE
+    _FUSE_PIPELINE = bool(on)
+
+
+@contextlib.contextmanager
+def use_pipeline_fusion(on: bool):
+    global _FUSE_PIPELINE
+    prev = _FUSE_PIPELINE
+    _FUSE_PIPELINE = bool(on)
+    try:
+        yield
+    finally:
+        _FUSE_PIPELINE = prev

@@ -10,8 +10,16 @@ and fuses the softmax between the two dot products via the online
 touches HBM.
 
 Supports causal masking, sliding-window (local) attention, GQA/MQA via
-an index map folding query heads onto their KV head, and a kv_len bound
-for padded caches.
+an index map folding query heads onto their KV head, a kv_len bound
+for padded caches, and an additive score bias (relative-position bias /
+shift masks for Swin window attention): bias blocks stream into the
+score loop, so the biased S x S matrix is never materialized. A bias of
+shape (nb, Hq, Sq, Skv) broadcasts over the batch in cycles of ``nb``
+(nb = windows-per-image for Swin's shift masks, 1 for a pure
+relative-position bias). When the bias is batch-invariant (nb == 1, no
+GQA), the flattened batch*head grid axis is reordered head-major so one
+bias block stays VMEM-resident across the whole batch sweep instead of
+being re-fetched per (batch, head).
 """
 from __future__ import annotations
 
@@ -27,9 +35,13 @@ NEG_INF = -1e30
 _LANES = 128
 
 
-def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-                 scale: float, causal: bool, window: int,
+def _attn_kernel(q_ref, k_ref, v_ref, *refs,
+                 scale: float, causal: bool, window: int, with_bias: bool,
                  bq: int, bk: int, n_k: int, q_offset: int, kv_len: int):
+    if with_bias:
+        b_ref, o_ref, m_scr, l_scr, acc_scr = refs
+    else:
+        b_ref, (o_ref, m_scr, l_scr, acc_scr) = None, refs
     qi, ki = pl.program_id(1), pl.program_id(2)
 
     @pl.when(ki == 0)
@@ -57,6 +69,8 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         v = v_ref[0]                      # (bk, hd)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
+        if with_bias:
+            s = s + b_ref[0].astype(jnp.float32)
         q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
         k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
         mask = k_pos < kv_len
@@ -87,12 +101,15 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 def flash_attention_p(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                       causal: bool = True, window: int = 0,
                       scale: Optional[float] = None,
+                      bias: Optional[jnp.ndarray] = None,
                       block_q: int = 128, block_k: int = 128,
                       q_offset: int = 0,
                       interpret: bool = False) -> jnp.ndarray:
     """q: (B, Hq, Sq, hd); k, v: (B, Hkv, Skv, hd) -> (B, Hq, Sq, hd).
 
     ``q_offset``: absolute position of q[..., 0, :] (chunked prefill).
+    ``bias``: (nb, Hq, Sq, Skv) additive score bias; batch index b uses
+    bias row b % nb (nb must divide B).
     """
     b, hq, sq, hd = q.shape
     _, hkv, skv, _ = k.shape
@@ -114,21 +131,60 @@ def flash_attention_p(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     n_k = skv_p // bk
     grid = (b * hq, sq_p // bq, n_k)
 
-    def kv_index(bh, qi, ki):
-        return ((bh // hq) * hkv + (bh % hq) // group, ki, 0)
+    nb = 0
+    if bias is not None:
+        nb = bias.shape[0]
+        assert bias.shape[1:] == (hq, sq, skv) and b % nb == 0, (
+            bias.shape, (b, hq, sq, skv))
+        if (sq_p, skv_p) != (sq, skv):
+            bias = jnp.pad(bias, ((0, 0), (0, 0), (0, sq_p - sq),
+                                  (0, skv_p - skv)))
+        bias = bias.reshape(nb * hq, sq_p, skv_p)
+
+    # Grid axis 0 enumerates (batch, head). With a batch-invariant bias
+    # and no GQA head grouping there is no KV-panel reuse to protect, so
+    # flip to head-major: the bias block's index then changes only once
+    # per batch sweep and stays VMEM-resident (28 KB fetched Hq times
+    # instead of B*Hq times for Swin's 49x49 windows).
+    head_major = bias is not None and nb == 1 and group == 1
+    if head_major:
+        def qo_index(bh, qi, ki):
+            return ((bh % b) * hq + bh // b, qi, 0)
+
+        def kv_index(bh, qi, ki):
+            return ((bh % b) * hkv + (bh // b) // group, ki, 0)
+
+        def bias_index(bh, qi, ki):
+            return (bh // b, qi, ki)
+    else:
+        def qo_index(bh, qi, ki):
+            return (bh, qi, 0)
+
+        def kv_index(bh, qi, ki):
+            return ((bh // hq) * hkv + (bh % hq) // group, ki, 0)
+
+        def bias_index(bh, qi, ki):
+            return (((bh // hq) % nb) * hq + bh % hq, qi, ki)
+
+    in_specs = [
+        pl.BlockSpec((1, bq, hd), qo_index),
+        pl.BlockSpec((1, bk, hd), kv_index),
+        pl.BlockSpec((1, bk, hd), kv_index),
+    ]
+    inputs = [qf, kf, vf]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, bq, bk), bias_index))
+        inputs.append(bias)
 
     kernel = functools.partial(
         _attn_kernel, scale=scale, causal=causal, window=window,
-        bq=bq, bk=bk, n_k=n_k, q_offset=q_offset, kv_len=skv)
+        with_bias=bias is not None, bq=bq, bk=bk, n_k=n_k,
+        q_offset=q_offset, kv_len=skv)
     out = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, bq, hd), lambda bh, qi, ki: (bh, qi, 0)),
-            pl.BlockSpec((1, bk, hd), kv_index),
-            pl.BlockSpec((1, bk, hd), kv_index),
-        ],
-        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, qi, ki: (bh, qi, 0)),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bq, hd), qo_index),
         out_shape=jax.ShapeDtypeStruct((b * hq, sq_p, hd), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((bq, _LANES), jnp.float32),   # running max
@@ -136,5 +192,5 @@ def flash_attention_p(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
             pltpu.VMEM((bq, hd), jnp.float32),       # fp32 accumulator
         ],
         interpret=interpret,
-    )(qf, kf, vf)
+    )(*inputs)
     return out.reshape(b, hq, sq_p, hd)[:, :, :sq, :]

@@ -7,24 +7,47 @@ statistics regardless of input dtype.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _norm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float, kind: str):
-    x = x_ref[...].astype(jnp.float32)             # (bm, D)
+def rownorm(x, gamma, beta=None, *, kind: str, eps: float,
+            n_valid: Optional[int] = None):
+    """fp32 LayerNorm/RMSNorm of a (bm, D) row panel — the shared norm
+    math for the standalone kernel AND the matmul kernel's fused norm
+    prologue. ``n_valid`` masks a zero-padded tail of the channel dim so
+    statistics are taken over the true D only (the prologue's K panel is
+    lane-padded)."""
+    x = x.astype(jnp.float32)
+    d = x.shape[-1]
+    masked = n_valid is not None and n_valid != d
+    if masked:
+        mask = jax.lax.broadcasted_iota(jnp.int32, x.shape,
+                                        x.ndim - 1) < n_valid
+        xm = jnp.where(mask, x, 0.0)
+    else:
+        xm = x
+    denom = n_valid if masked else d
     if kind == "layer":
-        mu = jnp.mean(x, -1, keepdims=True)
+        mu = jnp.sum(xm, -1, keepdims=True) / denom
         xc = x - mu
+        if masked:
+            xc = jnp.where(mask, xc, 0.0)
     else:                                          # rms
-        xc = x
-    var = jnp.mean(jnp.square(xc), -1, keepdims=True)
-    y = xc * jax.lax.rsqrt(var + eps)
-    y = y * g_ref[...].astype(jnp.float32)
-    if b_ref is not None:
-        y = y + b_ref[...].astype(jnp.float32)
+        xc = xm
+    var = jnp.sum(jnp.square(xc), -1, keepdims=True) / denom
+    y = xc * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)
+    if beta is not None:
+        y = y + beta.astype(jnp.float32)
+    return y
+
+
+def _norm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float, kind: str):
+    y = rownorm(x_ref[...], g_ref[...],
+                None if b_ref is None else b_ref[...], kind=kind, eps=eps)
     o_ref[...] = y.astype(o_ref.dtype)
 
 

@@ -6,10 +6,22 @@ wrapper handles leading batch dims and impl dispatch (pallas /
 interpret / jnp ref); MXU padding and the adder-tree split of oversized
 contractions live inside the kernel's 3-D grid, so any plan is exactly
 one ``pallas_call``.
+
+PR 2 lifts the fusion one level, from inside a matmul to *between* the
+ops of a transformer sublayer (DESIGN.md §3):
+
+  * ``matmul(norm=...)``        — pre-norm runs as the kernel prologue;
+  * ``matmul(residual=...)``    — the residual add rides the epilogue;
+  * :func:`qkv_proj`            — wq|wk|wv concatenated along N so one
+                                  activation row panel feeds all heads'
+                                  projections (column weight sharing);
+  * :func:`gate_up_proj`        — gate and up weights stream through
+                                  one kernel whose epilogue computes
+                                  ``act(g) * h`` (SwiGLU/GeGLU).
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import NamedTuple, Optional, Sequence
 
 import jax.numpy as jnp
 
@@ -21,62 +33,195 @@ from repro.kernels.layernorm import layernorm_p
 from repro.kernels.rowwise_matmul import rowwise_matmul_p
 
 
+class NormSpec(NamedTuple):
+    """A pre-norm to fuse into a matmul's prologue."""
+    kind: str                       # 'layer' | 'rms'
+    gamma: jnp.ndarray
+    beta: Optional[jnp.ndarray] = None
+    eps: float = 1e-6
+
+
 def _flatten_leading(x):
     lead = x.shape[:-1]
     return x.reshape(-1, x.shape[-1]), lead
 
 
+def _plan_norm_fallback(x2, norm, interpret, n, **plan_kw):
+    """Plan the fused pipeline; if the norm prologue can't hold the full
+    K in one panel (k_splits > 1), run the standalone norm kernel and
+    re-plan the remaining (still fused) pipeline. Returns
+    (x2, norm, plan)."""
+    m, k = x2.shape
+    plan = plan_matmul(m, k, n, dtype_bytes=x2.dtype.itemsize,
+                       prologue=norm is not None, **plan_kw)
+    if norm is not None and plan.k_splits > 1:
+        x2 = layernorm_p(x2, norm.gamma, norm.beta, eps=norm.eps,
+                         kind=norm.kind, interpret=interpret)
+        norm = None
+        plan = plan_matmul(m, k, n, dtype_bytes=x2.dtype.itemsize,
+                           **plan_kw)
+    return x2, norm, plan
+
+
 def matmul(x: jnp.ndarray, w: jnp.ndarray, *,
            bias: Optional[jnp.ndarray] = None,
            activation: Optional[str] = None,
+           residual: Optional[jnp.ndarray] = None,
+           norm: Optional[NormSpec] = None,
+           wide_n: Optional[bool] = None,
            impl: Optional[str] = None,
            out_dtype=None) -> jnp.ndarray:
-    """x: (..., K) @ w: (K, N) -> (..., N) with fused bias/activation."""
+    """x: (..., K) @ w: (K, N) -> (..., N) with fused bias/activation.
+
+    ``norm``: pre-normalize x in the kernel prologue (falls back to the
+    standalone norm kernel when K exceeds one VMEM panel).
+    ``residual``: (..., N) added after the activation, in the epilogue.
+    ``wide_n``: plan a single-n-tile schedule so the activation panel
+    is fetched once for the whole (concatenated) N; defaults to on
+    whenever a norm prologue rides along.
+    """
     impl = impl or runtime.resolve_impl()
     x2, lead = _flatten_leading(x)
+    n = w.shape[1]
+    res2 = None if residual is None else residual.reshape(-1, n)
     if impl == "ref":
-        out = ref.matmul_ref(x2, w, bias=bias, activation=activation,
-                             out_dtype=out_dtype)
-        return out.reshape(*lead, w.shape[1])
+        out = ref.pipeline_ref(
+            x2, w, bias=bias, activation=activation, residual=res2,
+            norm_kind=norm.kind if norm else None,
+            gamma=norm.gamma if norm else None,
+            beta=norm.beta if norm else None,
+            eps=norm.eps if norm else 1e-6, out_dtype=out_dtype)
+        return out.reshape(*lead, n)
 
     interpret = impl == "interpret"
-    m, k = x2.shape
-    n = w.shape[1]
+    wide = (norm is not None) if wide_n is None else wide_n
     # The plan alone decides the decomposition: oversized contractions
     # become the kernel grid's innermost k axis (in-VMEM adder tree),
-    # so every shape is exactly one pallas_call.
-    plan = plan_matmul(m, k, n, dtype_bytes=x2.dtype.itemsize)
-    out = rowwise_matmul_p(x2, w, bias=bias, activation=activation,
-                           out_dtype=out_dtype, plan=plan,
-                           interpret=interpret)
+    # so every shape is exactly one pallas_call (two when the norm
+    # prologue must fall back to the standalone kernel).
+    x2, norm, plan = _plan_norm_fallback(
+        x2, norm, interpret, n, residual=res2 is not None,
+        res_bytes=None if res2 is None else res2.dtype.itemsize,
+        wide_n=wide)
+    out = rowwise_matmul_p(
+        x2, w, bias=bias, activation=activation, residual=res2,
+        prologue=norm.kind if norm else None,
+        gamma=norm.gamma if norm else None,
+        pbeta=norm.beta if norm else None,
+        eps=norm.eps if norm else 1e-6,
+        out_dtype=out_dtype, plan=plan, interpret=interpret)
+    return out.reshape(*lead, n)
+
+
+def qkv_proj(x: jnp.ndarray, ws: Sequence[jnp.ndarray], *,
+             biases: Optional[Sequence[Optional[jnp.ndarray]]] = None,
+             norm: Optional[NormSpec] = None,
+             impl: Optional[str] = None):
+    """Multi-output wide-N projection: [w0 | w1 | ...] along N, one
+    kernel launch, one activation-row fetch for every projection — the
+    paper's column weight sharing lifted to the q/k/v (or any sibling
+    projection) level. Returns one output per weight.
+
+    NB: the concat happens per call, so XLA materializes the wide
+    weight each forward — a weight-sized HBM write that matters when M
+    is small (decode). Storing the projections pre-concatenated in the
+    param tree (as the Swin params already do) removes it; that
+    param-layout migration is tracked as a follow-up in DESIGN.md §3.
+    """
+    splits = [w.shape[1] for w in ws]
+    w_cat = jnp.concatenate(list(ws), axis=1)
+    b_cat = None
+    if biases is not None and any(b is not None for b in biases):
+        b_cat = jnp.concatenate(
+            [jnp.zeros((w.shape[1],), x.dtype) if b is None else b
+             for w, b in zip(ws, biases)])
+    out = matmul(x, w_cat, bias=b_cat, norm=norm, wide_n=True, impl=impl)
+    outs, off = [], 0
+    for s in splits:
+        outs.append(out[..., off:off + s])
+        off += s
+    return tuple(outs)
+
+
+def gate_up_proj(x: jnp.ndarray, w_gate: jnp.ndarray, w_in: jnp.ndarray, *,
+                 activation: str,
+                 bias_gate: Optional[jnp.ndarray] = None,
+                 bias_in: Optional[jnp.ndarray] = None,
+                 norm: Optional[NormSpec] = None,
+                 impl: Optional[str] = None) -> jnp.ndarray:
+    """Gated FFN front half as ONE kernel: ``act(x@w_gate) * (x@w_in)``
+    with optional fused pre-norm — SwiGLU/GeGLU in a single launch
+    (two matmuls + gating multiply; four launches on the seed path).
+    """
+    impl = impl or runtime.resolve_impl()
+    x2, lead = _flatten_leading(x)
+    n = w_in.shape[1]
+    if impl == "ref":
+        out = ref.pipeline_ref(
+            x2, w_in, bias=bias_in, activation=activation, w_gate=w_gate,
+            bias_gate=bias_gate,
+            norm_kind=norm.kind if norm else None,
+            gamma=norm.gamma if norm else None,
+            beta=norm.beta if norm else None,
+            eps=norm.eps if norm else 1e-6)
+        return out.reshape(*lead, n)
+
+    interpret = impl == "interpret"
+    x2, norm, plan = _plan_norm_fallback(x2, norm, interpret, n,
+                                         n_weights=2, wide_n=True)
+    out = rowwise_matmul_p(
+        x2, w_in, bias=bias_in, activation=activation, w_gate=w_gate,
+        bias_gate=bias_gate,
+        prologue=norm.kind if norm else None,
+        gamma=norm.gamma if norm else None,
+        pbeta=norm.beta if norm else None,
+        eps=norm.eps if norm else 1e-6,
+        plan=plan, interpret=interpret)
     return out.reshape(*lead, n)
 
 
 def matmul_int8(xq, wq, x_scale, w_scale, *, bias=None, activation=None,
+                residual=None, wide_n: bool = False,
                 impl: Optional[str] = None, out_dtype=jnp.float32):
-    """W8A8 path: int8 x int8 -> int32 accum -> dequant epilogue."""
+    """W8A8 path: int8 x int8 -> int32 accum -> dequant epilogue.
+
+    Wide-N int8 works by concatenating weights AND per-channel scales
+    along N (pass ``wide_n=True`` for the single-activation-fetch
+    schedule); ``residual`` rides the epilogue like the fp path.
+    """
     impl = impl or runtime.resolve_impl()
     x2, lead = _flatten_leading(xq)
+    n = wq.shape[1]
     s2 = x_scale.reshape(-1, 1)
+    res2 = None if residual is None else residual.reshape(-1, n)
     if impl == "ref":
         out = ref.matmul_int8_ref(x2, wq, s2, w_scale, bias=bias,
                                   activation=activation, out_dtype=out_dtype)
+        if res2 is not None:
+            out = (out.astype(jnp.float32)
+                   + res2.astype(jnp.float32)).astype(out_dtype)
     else:
+        m = x2.shape[0]
+        plan = plan_matmul(m, x2.shape[1], n, dtype_bytes=1,
+                           residual=res2 is not None,
+                           res_bytes=(res2.dtype.itemsize
+                                      if res2 is not None else None),
+                           wide_n=wide_n)
         out = rowwise_matmul_p(x2, wq, x_scale=s2, w_scale=w_scale,
                                bias=bias, activation=activation,
-                               out_dtype=out_dtype,
-                               interpret=impl == "interpret")
-    return out.reshape(*lead, wq.shape[1])
+                               residual=res2, out_dtype=out_dtype,
+                               plan=plan, interpret=impl == "interpret")
+    return out.reshape(*lead, n)
 
 
 def attention(q, k, v, *, causal=True, window: int = 0, scale=None,
-              q_offset: int = 0, impl: Optional[str] = None):
+              q_offset: int = 0, bias=None, impl: Optional[str] = None):
     impl = impl or runtime.resolve_impl()
     if impl == "ref":
         return ref.attention_ref(q, k, v, causal=causal, window=window,
-                                 scale=scale, q_offset=q_offset)
+                                 scale=scale, q_offset=q_offset, bias=bias)
     return flash_attention_p(q, k, v, causal=causal, window=window,
-                             scale=scale, q_offset=q_offset,
+                             scale=scale, q_offset=q_offset, bias=bias,
                              interpret=impl == "interpret")
 
 

@@ -28,6 +28,33 @@ def matmul_ref(x, w, *, bias=None, activation=None, out_dtype=None):
     return _ACTS[activation](acc).astype(out_dtype)
 
 
+def pipeline_ref(x, w, *, bias=None, activation=None, w_gate=None,
+                 bias_gate=None, residual=None, norm_kind=None,
+                 gamma=None, beta=None, eps=1e-6, out_dtype=None):
+    """Oracle for the fused block pipeline: optional pre-norm, one or
+    two (gated) matmuls, bias/activation/gating, residual add — the
+    exact composition the Pallas pipeline kernel fuses."""
+    out_dtype = out_dtype or x.dtype
+    if norm_kind is not None:
+        x = layernorm_ref(x, gamma, beta, eps=eps, kind=norm_kind)
+    h = jax.lax.dot_general(x, w, (((x.ndim - 1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    if bias is not None:
+        h = h + bias.astype(jnp.float32)
+    if w_gate is not None:
+        g = jax.lax.dot_general(x, w_gate,
+                                (((x.ndim - 1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if bias_gate is not None:
+            g = g + bias_gate.astype(jnp.float32)
+        h = _ACTS[activation](g) * h
+    else:
+        h = _ACTS[activation](h)
+    if residual is not None:
+        h = h + residual.astype(jnp.float32)
+    return h.astype(out_dtype)
+
+
 def matmul_int8_ref(xq, wq, x_scale, w_scale, *, bias=None,
                     activation=None, out_dtype=jnp.float32):
     acc = jnp.dot(xq.astype(jnp.int32), wq.astype(jnp.int32))
@@ -39,8 +66,12 @@ def matmul_int8_ref(xq, wq, x_scale, w_scale, *, bias=None,
 
 def attention_ref(q, k, v, *, causal=True, window: int = 0,
                   scale: Optional[float] = None, q_offset: int = 0,
-                  kv_len: Optional[int] = None):
-    """Dense softmax attention. q: (B,Hq,Sq,hd); k,v: (B,Hkv,Skv,hd)."""
+                  kv_len: Optional[int] = None, bias=None):
+    """Dense softmax attention. q: (B,Hq,Sq,hd); k,v: (B,Hkv,Skv,hd).
+
+    ``bias``: (nb, Hq, Sq, Skv) additive score bias, batch b uses row
+    b % nb (Swin relative-position bias / shift masks).
+    """
     b, hq, sq, hd = q.shape
     _, hkv, skv, _ = k.shape
     scale = hd ** -0.5 if scale is None else scale
@@ -49,6 +80,10 @@ def attention_ref(q, k, v, *, causal=True, window: int = 0,
     v = jnp.repeat(v, group, axis=1)
     s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
+    if bias is not None:
+        nb = bias.shape[0]
+        s = (s.reshape(b // nb, nb, hq, sq, skv)
+             + bias[None].astype(jnp.float32)).reshape(b, hq, sq, skv)
     q_pos = q_offset + jnp.arange(sq)[:, None]
     k_pos = jnp.arange(skv)[None, :]
     mask = jnp.ones((sq, skv), bool)

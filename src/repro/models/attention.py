@@ -267,22 +267,35 @@ def _sdpa(q, k, v, *, causal, window, q_offset=0, kv_len=None):
 
 
 def apply(params, x, *, cfg: ModelConfig, positions, window: int = 0,
-          causal: bool = True, kv: Optional[tuple] = None):
+          causal: bool = True, kv: Optional[tuple] = None,
+          norm: Optional[ops.NormSpec] = None, residual=None):
     """Full-sequence forward (train / prefill).
 
     kv: optional (k_states, v_states) override for cross-attention.
+    norm: fused-pipeline mode — x arrives *un-normalized* and the
+    pre-norm runs as the qkv kernel's prologue, with wq|wk|wv
+    concatenated along N (one activation fetch for all projections).
+    residual: folded into the output projection's epilogue.
     Returns (out, (k_heads, v_heads)) — the heads are cached by prefill.
     """
     b, s, d = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    q = ops.matmul(x, params["wq"]).reshape(b, s, hq, hd)
     if kv is None:
-        k = ops.matmul(x, params["wk"]).reshape(b, s, hkv, hd)
-        v = ops.matmul(x, params["wv"]).reshape(b, s, hkv, hd)
+        if norm is not None:
+            q, k, v = ops.qkv_proj(
+                x, (params["wq"], params["wk"], params["wv"]), norm=norm)
+        else:
+            q = ops.matmul(x, params["wq"])
+            k = ops.matmul(x, params["wk"])
+            v = ops.matmul(x, params["wv"])
+        q = q.reshape(b, s, hq, hd)
+        k = k.reshape(b, s, hkv, hd)
+        v = v.reshape(b, s, hkv, hd)
         q, k = _apply_rope(q, k, cfg, positions)
     else:
         xk, xv = kv
         sk = xk.shape[1]
+        q = ops.matmul(x, params["wq"], norm=norm).reshape(b, s, hq, hd)
         k = ops.matmul(xk, params["wk"]).reshape(b, sk, hkv, hd)
         v = ops.matmul(xv, params["wv"]).reshape(b, sk, hkv, hd)
     qh = q.transpose(0, 2, 1, 3)
@@ -291,7 +304,7 @@ def apply(params, x, *, cfg: ModelConfig, positions, window: int = 0,
     qh = logical_constraint(qh, "batch", "heads", "seq", None)
     out = _sdpa(qh, kh, vh, causal=causal, window=window)
     out = out.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
-    return ops.matmul(out, params["wo"]), (k, v)
+    return ops.matmul(out, params["wo"], residual=residual), (k, v)
 
 
 def write_cache(cache: KVCache, k_new, v_new, pos, window: int = 0):
@@ -311,9 +324,10 @@ def write_cache(cache: KVCache, k_new, v_new, pos, window: int = 0):
 
 
 def decode_apply(params, x, cache: KVCache, *, cfg: ModelConfig,
-                 lengths, window: int = 0):
+                 lengths, window: int = 0,
+                 norm: Optional[ops.NormSpec] = None, residual=None):
     """One-token decode. x: (B, 1, d); lengths: (B,) tokens already in
-    cache. Returns (out, new_cache).
+    cache. Returns (out, new_cache). norm/residual as in :func:`apply`.
 
     Global (non-window) layers use the sequence-sharded flash decode
     when the cache is sharded along seq over 'model' and the
@@ -323,9 +337,16 @@ def decode_apply(params, x, cache: KVCache, *, cfg: ModelConfig,
     from repro.core import partitioning
     b, _, d = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    q = ops.matmul(x, params["wq"]).reshape(b, 1, hq, hd)
-    k = ops.matmul(x, params["wk"]).reshape(b, 1, hkv, hd)
-    v = ops.matmul(x, params["wv"]).reshape(b, 1, hkv, hd)
+    if norm is not None:
+        q, k, v = ops.qkv_proj(
+            x, (params["wq"], params["wk"], params["wv"]), norm=norm)
+    else:
+        q = ops.matmul(x, params["wq"])
+        k = ops.matmul(x, params["wk"])
+        v = ops.matmul(x, params["wv"])
+    q = q.reshape(b, 1, hq, hd)
+    k = k.reshape(b, 1, hkv, hd)
+    v = v.reshape(b, 1, hkv, hd)
     q, k = _apply_rope(q, k, cfg, lengths[:, None])
 
     mesh = partitioning.active_mesh()
@@ -340,7 +361,7 @@ def decode_apply(params, x, cache: KVCache, *, cfg: ModelConfig,
         out, cache = _decode_seq_sharded(q, k, v, cache, lengths,
                                          cfg=cfg, mesh=mesh)
         out = out.reshape(b, 1, hq * hd)
-        return ops.matmul(out, params["wo"]), cache
+        return ops.matmul(out, params["wo"], residual=residual), cache
 
     cache = write_cache(cache, k, v, lengths, window)
     alloc = cache.k.shape[1]
@@ -357,7 +378,7 @@ def decode_apply(params, x, cache: KVCache, *, cfg: ModelConfig,
     out = chunked_attention(qh, kh, vh, causal=False, window=0,
                             q_offset=0, kv_len=kv_len)
     out = out.reshape(b, 1, hq * hd)
-    return ops.matmul(out, params["wo"]), cache
+    return ops.matmul(out, params["wo"], residual=residual), cache
 
 
 def _decode_seq_sharded(q, k_new, v_new, cache: KVCache, lengths, *,

@@ -12,6 +12,7 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import runtime
 from repro.core.partitioning import logical_constraint
 from repro.core.types import BlockDef, ModelConfig
 from repro.kernels import ops
@@ -32,6 +33,10 @@ def _norm_init(cfg: ModelConfig, stack, dtype, name="g"):
 
 def _norm_apply(p, x, cfg: ModelConfig):
     return ops.layernorm(x, p["g"], p.get("b"), kind=cfg.norm)
+
+
+def _norm_spec(p, cfg: ModelConfig) -> ops.NormSpec:
+    return ops.NormSpec(cfg.norm, p["g"], p.get("b"))
 
 
 def init_block(key, blk: BlockDef, cfg: ModelConfig, stack, dtype):
@@ -77,22 +82,31 @@ def apply_block(blk: BlockDef, params, x, *, cfg: ModelConfig, mode: str,
     new_cache = {}
     prefill_state = {}
     window = blk.window if window_override is None else window_override
+    # Fused pipeline (DESIGN.md §3): the attn/mlp sublayers take the RAW
+    # hidden state plus a NormSpec — the pre-norm runs as the qkv /
+    # gate-up kernel prologue and the residual add rides the output
+    # projection's epilogue, so neither intermediate exists in HBM.
+    fuse = runtime.pipeline_fusion()
 
-    h = _norm_apply(params["norm1"], x, cfg)
     if blk.mixer == "attn":
+        nspec = _norm_spec(params["norm1"], cfg) if fuse else None
+        h = x if fuse else _norm_apply(params["norm1"], x, cfg)
+        res = x if fuse else None
         if mode == "decode":
             out, kv_new = attention.decode_apply(
                 params["attn"], h, cache["kv"], cfg=cfg, lengths=lengths,
-                window=window)
+                window=window, norm=nspec, residual=res)
             new_cache["kv"] = kv_new
         else:
             out, (k, v) = attention.apply(params["attn"], h, cfg=cfg,
                                           positions=positions,
-                                          window=window, causal=True)
+                                          window=window, causal=True,
+                                          norm=nspec, residual=res)
             if mode == "prefill":
                 prefill_state["kv"] = (k, v)
-        x = x + out
+        x = out if fuse else x + out
     elif blk.mixer == "mamba2":
+        h = _norm_apply(params["norm1"], x, cfg)
         state = cache["mamba"] if mode == "decode" else None
         out, s_new = mamba2.apply(params["mamba"], h, cfg=cfg, state=state)
         if mode == "decode":
@@ -101,6 +115,7 @@ def apply_block(blk: BlockDef, params, x, *, cfg: ModelConfig, mode: str,
             prefill_state["mamba"] = s_new
         x = x + out
     elif blk.mixer == "rwkv6":
+        h = _norm_apply(params["norm1"], x, cfg)
         state = cache["rwkv_t"] if mode == "decode" else None
         out, (x_last, wkv) = rwkv6.apply(params["tmix"], h, cfg=cfg,
                                          state=state)
@@ -135,14 +150,21 @@ def apply_block(blk: BlockDef, params, x, *, cfg: ModelConfig, mode: str,
         x = x + out
 
     if blk.ffn != "none":
-        h = _norm_apply(params["norm2"], x, cfg)
         if blk.ffn == "mlp":
-            x = x + mlp.apply(params["ffn"], h, cfg=cfg)
+            if fuse:
+                x = mlp.apply(params["ffn"], x, cfg=cfg,
+                              norm=_norm_spec(params["norm2"], cfg),
+                              residual=x)
+            else:
+                h = _norm_apply(params["norm2"], x, cfg)
+                x = x + mlp.apply(params["ffn"], h, cfg=cfg)
         elif blk.ffn == "moe":
+            h = _norm_apply(params["norm2"], x, cfg)
             out, aux_l = moe.apply(params["ffn"], h, cfg=cfg)
             x = x + out
             aux = aux + aux_l
         elif blk.ffn == "rwkv6_cmix":
+            h = _norm_apply(params["norm2"], x, cfg)
             state = cache["rwkv_c"] if mode == "decode" else None
             x_last_c = (state["x_prev_c"] if mode == "decode"
                         else jnp.zeros_like(h[:, 0]))

@@ -37,15 +37,24 @@ def init(key, cfg: ModelConfig, stack: Optional[int], dtype,
     return params, specs
 
 
-def apply(params, x, *, cfg: ModelConfig):
+def apply(params, x, *, cfg: ModelConfig, norm=None, residual=None):
+    """``norm``/``residual`` select the fused pipeline (DESIGN.md §3):
+    the pre-norm runs as the first kernel's prologue, gated variants
+    stream wg and wi through ONE kernel whose epilogue computes
+    ``act(g) * h``, and the residual add rides the output projection's
+    epilogue. With both None this is the seed's per-op composition."""
     act = {"silu": "silu", "geglu": "gelu", "gelu": "gelu",
            "relu": "relu"}[cfg.act]
     if cfg.act in GATED:
-        g = ops.matmul(x, params["wg"], activation=act)
-        h = ops.matmul(x, params["wi"]) * g
+        if norm is not None:
+            h = ops.gate_up_proj(x, params["wg"], params["wi"],
+                                 activation=act, norm=norm)
+        else:
+            g = ops.matmul(x, params["wg"], activation=act)
+            h = ops.matmul(x, params["wi"]) * g
     else:
-        h = ops.matmul(x, params["wi"], activation=act)
-    return ops.matmul(h, params["wo"])
+        h = ops.matmul(x, params["wi"], activation=act, norm=norm)
+    return ops.matmul(h, params["wo"], residual=residual)
 
 
 # ---------------------------- RWKV channel-mix -------------------------

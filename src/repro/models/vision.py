@@ -4,8 +4,17 @@ Exercises the row-wise kernels end-to-end exactly as the ASIC does:
 patch-embed conv -> the same matmul primitive (Sec. IV-C), FC layers ->
 row-wise matmul (Sec. IV-D), W-MSA -> Q-stationary attention within 7x7
 windows (Sec. IV-E). Used by the vision example and the paper-table
-benchmarks. Window attention keeps relative-position bias and shifted
-windows (standard Swin); scores are computed densely (49-token windows).
+benchmarks.
+
+With pipeline fusion on (the default, see DESIGN.md §3) a block runs as
+four dense-pipeline kernel launches — [ln1-prologue + qkv],
+[proj + residual], [ln2-prologue + mlp1 + gelu], [mlp2 + residual] —
+plus the flash window-attention kernel, which takes the
+relative-position bias (and shift mask) as an additive score-bias
+operand instead of materializing dense 49x49 score matrices. With
+fusion off the seed's per-op composition (separate norm kernels, dense
+windowed scores, XLA residual adds) is preserved as the before/after
+baseline.
 """
 from __future__ import annotations
 
@@ -16,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.swin_t import SwinConfig, ViTConfig
+from repro.core import runtime
 from repro.kernels import ops
 
 
@@ -99,7 +109,22 @@ def init_swin(key, cfg: SwinConfig, dtype=jnp.float32):
     return params
 
 
+def _rel_bias(blk, rel_idx, heads, shift, mask):
+    """Additive score bias (nb, heads, t, t): the relative-position
+    table gathered per window geometry, plus the shift mask per
+    window position when the block is shifted."""
+    t = rel_idx.shape[0]
+    rel = jnp.take(blk["rel_bias"], rel_idx.reshape(-1), axis=0)
+    bias = rel.reshape(t, t, heads).transpose(2, 0, 1)[None]   # (1,h,t,t)
+    if shift:
+        bias = bias + mask[:, None]                 # (nW_img, h, t, t)
+    return bias
+
+
 def _wmsa(blk, x, heads, w, shift, rel_idx, mask):
+    """Seed per-op window attention: dense 49x49 scores, separate
+    norm/residual launches handled by the caller. Kept as the
+    pipeline-fusion-off baseline."""
     b, h, wd, c = x.shape
     hd = c // heads
     if shift:
@@ -130,18 +155,58 @@ def _wmsa(blk, x, heads, w, shift, rel_idx, mask):
     return x
 
 
+def _swin_block_fused(blk, x, heads, w, shift, rel_idx, mask):
+    """One Swin block as the fused pipeline: [ln1-prologue + qkv],
+    flash window attention with the bias operand, [proj + residual],
+    [ln2-prologue + mlp1 + gelu], [mlp2 + residual]."""
+    b, h, wd, c = x.shape
+    hd = c // heads
+    xr = jnp.roll(x, (-shift, -shift), axis=(1, 2)) if shift else x
+    xw = _window_partition(xr, w)                  # (B*nW, t, C)
+    nw, t, _ = xw.shape
+    qkv = ops.matmul(xw, blk["qkv"], bias=blk["qkv_b"],
+                     norm=ops.NormSpec("layer", blk["ln1_g"],
+                                       blk["ln1_b"]))
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads_of(z):
+        return z.reshape(nw, t, heads, hd).transpose(0, 2, 1, 3)
+
+    bias = _rel_bias(blk, rel_idx, heads, shift, mask)
+    o = ops.attention(heads_of(q), heads_of(k), heads_of(v),
+                      causal=False, bias=bias)
+    o = o.transpose(0, 2, 1, 3).reshape(nw, t, c)
+    # residual add in window layout == image layout (pure permutation)
+    o = ops.matmul(o, blk["proj"], bias=blk["proj_b"], residual=xw)
+    xr = _window_reverse(o, w, h, wd)
+    x = jnp.roll(xr, (shift, shift), axis=(1, 2)) if shift else xr
+
+    xf = x.reshape(-1, c)
+    hdn = ops.matmul(xf, blk["mlp1"], bias=blk["mlp1_b"],
+                     activation="gelu",
+                     norm=ops.NormSpec("layer", blk["ln2_g"],
+                                       blk["ln2_b"]))
+    return ops.matmul(hdn, blk["mlp2"], bias=blk["mlp2_b"],
+                      residual=xf).reshape(x.shape)
+
+
 def swin_forward(params, images, cfg: SwinConfig):
     """images: (B, H, W, 3) -> logits (B, classes)."""
     w = cfg.window
     x = ops.patch_embed(images, params["patch_w"], params["patch_b"],
                         patch=cfg.patch)          # (B, H/4, W/4, D)
     rel_idx = _rel_pos_index(w)
+    fuse = runtime.pipeline_fusion()
     for si, (depth, heads) in enumerate(zip(cfg.depths, cfg.num_heads)):
         stage = params["stages"][si]
         b, h, wd, c = x.shape
         mask = _shift_mask(h, wd, w, w // 2) if h > w else None
         for bi, blk in enumerate(stage["blocks"]):
             shift = (w // 2) if (bi % 2 == 1 and h > w) else 0
+            if fuse:
+                x = _swin_block_fused(blk, x, heads, w, shift, rel_idx,
+                                      mask)
+                continue
             res = x
             xn = ops.layernorm(x.reshape(-1, c), blk["ln1_g"],
                                blk["ln1_b"]).reshape(x.shape)
@@ -208,14 +273,28 @@ def vit_forward(params, images, cfg: ViTConfig):
     x = x + params["pos"].astype(x.dtype)
     heads = cfg.num_heads
     hd = d // heads
+    fuse = runtime.pipeline_fusion()
     for blk in params["blocks"]:
-        xn = ops.layernorm(x, blk["ln1_g"], blk["ln1_b"])
-        qkv = ops.matmul(xn, blk["qkv"])
-        q, k, v = jnp.split(qkv, 3, axis=-1)
-
         def hsplit(z):
             return z.reshape(b, -1, heads, hd).transpose(0, 2, 1, 3)
 
+        if fuse:
+            qkv = ops.matmul(x, blk["qkv"],
+                             norm=ops.NormSpec("layer", blk["ln1_g"],
+                                               blk["ln1_b"]))
+            q, k, v = jnp.split(qkv, 3, axis=-1)
+            o = ops.attention(hsplit(q), hsplit(k), hsplit(v),
+                              causal=False)
+            o = o.transpose(0, 2, 1, 3).reshape(b, -1, d)
+            x = ops.matmul(o, blk["proj"], residual=x)
+            h = ops.matmul(x, blk["mlp1"], activation="gelu",
+                           norm=ops.NormSpec("layer", blk["ln2_g"],
+                                             blk["ln2_b"]))
+            x = ops.matmul(h, blk["mlp2"], residual=x)
+            continue
+        xn = ops.layernorm(x, blk["ln1_g"], blk["ln1_b"])
+        qkv = ops.matmul(xn, blk["qkv"])
+        q, k, v = jnp.split(qkv, 3, axis=-1)
         o = ops.attention(hsplit(q), hsplit(k), hsplit(v), causal=False)
         o = o.transpose(0, 2, 1, 3).reshape(b, -1, d)
         x = x + ops.matmul(o, blk["proj"])

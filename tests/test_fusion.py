@@ -1,0 +1,335 @@
+"""Fused block-pipeline parity vs the per-op `ref` composition (PR 2).
+
+Covers the three fusion slots (norm prologue, wide-N multi-projection,
+residual/gating epilogues) across bf16/fp32/int8, the flash-attention
+score-bias operand, the pallas_call budget per attn+MLP sublayer pair,
+and the modeled HBM-traffic win the fusion must deliver.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import runtime
+from repro.core.block_traffic import swin_block_traffic, swin_t_stage_cases
+from repro.core.quant import quantize_per_channel, quantize_per_row
+from repro.core.rowwise import plan_matmul
+from repro.core.types import BlockDef, ModelConfig
+from repro.kernels import ops, ref
+from repro.kernels.rowwise_matmul import rowwise_matmul_p
+from repro.models import attention, blocks
+
+jax.config.update("jax_enable_x64", False)
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _rand(rng, shape, dtype=jnp.float32):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32).astype(dtype)
+
+
+def _tols(dtype):
+    return (1e-5, 8e-5) if dtype == jnp.float32 else (2e-2, 1.6e-1)
+
+
+def _close(got, want, dtype):
+    rtol, atol = _tols(dtype)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=rtol, atol=atol)
+
+
+# ------------------------- wide-N qkv projection -----------------------
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("kind", ["rms", "layer"])
+def test_qkv_proj_prologue_parity(rng, dtype, kind):
+    """[norm-prologue + wq|wk|wv wide-N] vs norm -> three matmuls."""
+    d = 96
+    x = _rand(rng, (2, 19, d), dtype)
+    ws = [_rand(rng, (d, 64), dtype), _rand(rng, (d, 32), dtype),
+          _rand(rng, (d, 32), dtype)]
+    bs = [_rand(rng, (64,)), None, _rand(rng, (32,))]
+    g = _rand(rng, (d,))
+    b = _rand(rng, (d,)) if kind == "layer" else None
+    norm = ops.NormSpec(kind, g, b)
+    q, k, v = ops.qkv_proj(x, ws, biases=bs, norm=norm, impl="interpret")
+    xn = ref.layernorm_ref(x.reshape(-1, d), g, b, kind=kind)
+    for got, w, bias in zip((q, k, v), ws, bs):
+        want = ref.matmul_ref(xn, w, bias=bias).reshape(got.shape)
+        _close(got, want, dtype)
+
+
+def test_qkv_proj_int8_wide_n(rng):
+    """int8 wide-N: weights AND per-channel scales concatenate along N."""
+    d, m = 64, 33
+    x = _rand(rng, (m, d))
+    ws = [_rand(rng, (d, 32)), _rand(rng, (d, 16)), _rand(rng, (d, 16))]
+    xq, xs = quantize_per_row(x)
+    qs = [quantize_per_channel(w) for w in ws]
+    w_cat = jnp.concatenate([q for q, _ in qs], axis=1)
+    s_cat = jnp.concatenate([s for _, s in qs], axis=1)
+    got = ops.matmul_int8(xq, w_cat, xs, s_cat, wide_n=True,
+                          impl="interpret")
+    want = jnp.concatenate(
+        [ref.matmul_int8_ref(xq, q, xs.reshape(-1, 1), s)
+         for q, s in qs], axis=-1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ------------------------- gated gate|up kernel ------------------------
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("with_bias", [False, True])
+def test_gate_up_proj_parity(rng, dtype, with_bias):
+    """One kernel for act(x@wg) * (x@wi) (+ fused pre-norm)."""
+    d, f = 64, 96
+    x = _rand(rng, (2, 13, d), dtype)
+    wg, wi = _rand(rng, (d, f), dtype), _rand(rng, (d, f), dtype)
+    bg = _rand(rng, (f,)) if with_bias else None
+    bi = _rand(rng, (f,)) if with_bias else None
+    g = _rand(rng, (d,))
+    norm = ops.NormSpec("rms", g)
+    got = ops.gate_up_proj(x, wg, wi, activation="silu", bias_gate=bg,
+                           bias_in=bi, norm=norm, impl="interpret")
+    want = ref.pipeline_ref(x.reshape(-1, d), wi, bias=bi, w_gate=wg,
+                            bias_gate=bg, activation="silu",
+                            norm_kind="rms", gamma=g).reshape(got.shape)
+    _close(got, want, dtype)
+
+
+def test_gate_up_int8_kernel(rng):
+    """Gated epilogue under W8A8: per-weight dequant scales."""
+    d, f, m = 64, 48, 24
+    x, wg, wi = _rand(rng, (m, d)), _rand(rng, (d, f)), _rand(rng, (d, f))
+    xq, xs = quantize_per_row(x)
+    wgq, wgs = quantize_per_channel(wg)
+    wiq, wis = quantize_per_channel(wi)
+    got = rowwise_matmul_p(xq, wiq, x_scale=xs.reshape(-1, 1), w_scale=wis,
+                           w_gate=wgq, wg_scale=wgs, activation="silu",
+                           interpret=True)
+    want = (jax.nn.silu(ref.matmul_int8_ref(xq, wgq, xs.reshape(-1, 1), wgs))
+            * ref.matmul_int8_ref(xq, wiq, xs.reshape(-1, 1), wis))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gate_up_ksplit(rng):
+    """Gated accumulation across a forced k_splits > 1 adder tree."""
+    m, k, f = 16, 300, 128
+    x, wg, wi = _rand(rng, (m, k)), _rand(rng, (k, f)), _rand(rng, (k, f))
+    plan = plan_matmul(m, k, f, dtype_bytes=4, k_max=128, n_weights=2)
+    assert plan.k_splits > 1
+    got = rowwise_matmul_p(x, wi, w_gate=wg, activation="silu", plan=plan,
+                           interpret=True)
+    want = jax.nn.silu(x @ wg) * (x @ wi)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# --------------------------- norm prologue -----------------------------
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("kind", ["rms", "layer"])
+def test_norm_prologue_padded_k(rng, dtype, kind):
+    """K=100 lane-pads to 128: stats must mask the padded tail."""
+    m, k, n = 17, 100, 64
+    x, w = _rand(rng, (m, k), dtype), _rand(rng, (k, n), dtype)
+    g = _rand(rng, (k,))
+    b = _rand(rng, (k,)) if kind == "layer" else None
+    got = ops.matmul(x, w, norm=ops.NormSpec(kind, g, b), impl="interpret")
+    want = ref.matmul_ref(ref.layernorm_ref(x, g, b, kind=kind), w)
+    _close(got, want, dtype)
+
+
+def test_norm_prologue_fallback_large_k(rng):
+    """K beyond one VMEM panel: standalone norm + fused rest, 2 calls."""
+    m, k, n = 4, 9000, 64
+    x, w, g = _rand(rng, (m, k)), _rand(rng, (k, n)), _rand(rng, (k,))
+    norm = ops.NormSpec("rms", g)
+    got = ops.matmul(x, w, norm=norm, impl="interpret")
+    want = ref.matmul_ref(ref.layernorm_ref(x, g, None, kind="rms"), w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-3)
+    jaxpr = jax.make_jaxpr(
+        lambda a, b, c: ops.matmul(a, b, norm=ops.NormSpec("rms", c),
+                                   impl="interpret"))(x, w, g)
+    assert str(jaxpr).count("pallas_call") == 2, str(jaxpr)
+
+
+# ------------------------- residual epilogue ---------------------------
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_residual_epilogue(rng, dtype):
+    m, k, n = 24, 64, 48
+    x, w = _rand(rng, (m, k), dtype), _rand(rng, (k, n), dtype)
+    b, res = _rand(rng, (n,)), _rand(rng, (m, n), dtype)
+    got = ops.matmul(x, w, bias=b, activation="gelu", residual=res,
+                     impl="interpret")
+    want = ref.pipeline_ref(x, w, bias=b, activation="gelu", residual=res)
+    _close(got, want, dtype)
+
+
+def test_residual_epilogue_int8(rng):
+    m, k, n = 33, 96, 64
+    x, w = _rand(rng, (m, k)), _rand(rng, (k, n))
+    res = _rand(rng, (m, n))
+    xq, xs = quantize_per_row(x)
+    wq, ws = quantize_per_channel(w)
+    got = ops.matmul_int8(xq, wq, xs, ws, residual=res, impl="interpret")
+    want = ref.matmul_int8_ref(xq, wq, xs.reshape(-1, 1), ws) + res
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------- flash-attention score bias ---------------------
+
+
+@pytest.mark.parametrize("nb", [1, 4])
+def test_flash_attention_bias(rng, nb):
+    """Additive bias vs dense ref; nb=1 exercises the head-major grid."""
+    b, h, t, hd = 8, 3, 49, 32
+    q, k, v = (_rand(rng, (b, h, t, hd)) for _ in range(3))
+    bias = _rand(rng, (nb, h, t, t))
+    got = ops.attention(q, k, v, causal=False, bias=bias, impl="interpret")
+    want = ref.attention_ref(q, k, v, causal=False, bias=bias)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bias_gqa(rng):
+    b, hq, hkv, s, hd = 2, 8, 2, 64, 32
+    q = _rand(rng, (b, hq, s, hd))
+    k, v = _rand(rng, (b, hkv, s, hd)), _rand(rng, (b, hkv, s, hd))
+    bias = _rand(rng, (1, hq, s, s))
+    got = ops.attention(q, k, v, causal=True, bias=bias, impl="interpret")
+    want = ref.attention_ref(q, k, v, causal=True, bias=bias)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ------------------- per-sublayer-pair launch budget -------------------
+
+
+def _lm_cfg():
+    return ModelConfig(name="t", family="dense", n_layers=1, d_model=64,
+                       n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+                       act="silu", norm="rms")
+
+
+def test_sublayer_pair_pallas_call_budget():
+    """Fused attn+MLP sublayer pair: <= 4 dense-pipeline launches
+    ([norm+qkv], [wo+res], [norm+gate|up], [wo+res]) plus the
+    attention-core kernel — down from ~9 per-op launches. The counting
+    harness is shared with the BENCH_PR2.json artifact."""
+    from benchmarks.block_bench import sublayer_pallas_calls
+    fused = sublayer_pallas_calls(True)
+    unfused = sublayer_pallas_calls(False)
+    assert fused - 1 <= 4, fused          # minus the attention core
+    assert unfused - 1 >= 9, unfused      # the seed's per-op pipeline
+    assert fused <= unfused - 5
+
+
+# ----------------------- fused vs unfused parity -----------------------
+
+
+def test_lm_block_fused_parity(rng):
+    cfg = _lm_cfg()
+    blk = BlockDef(mixer="attn", ffn="mlp")
+    params, _ = blocks.init_block(jax.random.PRNGKey(1), blk, cfg, None,
+                                  jnp.float32)
+    x = _rand(rng, (2, 16, 64))
+    pos = jnp.broadcast_to(jnp.arange(16), (2, 16))
+    with runtime.use_pipeline_fusion(True):
+        xf, _ = blocks.apply_block(blk, params, x, cfg=cfg, mode="train",
+                                   positions=pos)
+    with runtime.use_pipeline_fusion(False):
+        xu, _ = blocks.apply_block(blk, params, x, cfg=cfg, mode="train",
+                                   positions=pos)
+    np.testing.assert_allclose(np.asarray(xf), np.asarray(xu),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_fused_parity(rng):
+    cfg = _lm_cfg()
+    blk = BlockDef(mixer="attn", ffn="mlp")
+    params, _ = blocks.init_block(jax.random.PRNGKey(2), blk, cfg, None,
+                                  jnp.float32)
+    x = _rand(rng, (2, 1, 64))
+    cache = {"kv": attention.init_cache(cfg, 2, 32, jnp.float32)}
+    lengths = jnp.array([5, 9])
+    outs = []
+    for fused in (True, False):
+        with runtime.use_pipeline_fusion(fused):
+            xo, io = blocks.apply_block(blk, params, x, cfg=cfg,
+                                        mode="decode", lengths=lengths,
+                                        cache=cache)
+        outs.append((xo, io.new_cache["kv"]))
+    np.testing.assert_allclose(np.asarray(outs[0][0]),
+                               np.asarray(outs[1][0]),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(outs[0][1].k),
+                               np.asarray(outs[1][1].k),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.slow
+def test_swin_forward_fused_parity():
+    """Whole reduced-Swin forward: fused pipeline (incl. flash window
+    attention with rel-pos bias) == the seed per-op path."""
+    from repro.configs.swin_t import reduced as swin_reduced
+    from repro.models import vision
+    cfg = swin_reduced()
+    key = jax.random.PRNGKey(0)
+    p = vision.init_swin(key, cfg)
+    img = jax.random.normal(key, (2, cfg.img_size, cfg.img_size, 3))
+    with runtime.use_pipeline_fusion(True):
+        lf = vision.swin_forward(p, img, cfg)
+    with runtime.use_pipeline_fusion(False):
+        lu = vision.swin_forward(p, img, cfg)
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(lu),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.slow
+def test_vit_forward_fused_parity():
+    from repro.configs.swin_t import ViTConfig
+    from repro.models import vision
+    cfg = ViTConfig(img_size=32, patch=8, embed_dim=64, depth=2,
+                    num_heads=4, num_classes=10)
+    key = jax.random.PRNGKey(0)
+    p = vision.init_vit(key, cfg)
+    img = jax.random.normal(key, (2, 32, 32, 3))
+    with runtime.use_pipeline_fusion(True):
+        lf = vision.vit_forward(p, img, cfg)
+    with runtime.use_pipeline_fusion(False):
+        lu = vision.vit_forward(p, img, cfg)
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(lu),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ----------------------- modeled HBM-traffic win -----------------------
+
+
+def test_swin_block_traffic_ratio():
+    """Acceptance: one Swin-T block forward moves >= 1.8x less modeled
+    HBM traffic fused than per-op (stage-1, non-shifted headline)."""
+    kw = swin_t_stage_cases()["stage1"]
+    fused = swin_block_traffic(**kw, fused=True)["total"]
+    unfused = swin_block_traffic(**kw, fused=False)["total"]
+    assert unfused / fused >= 1.8, (fused, unfused)
+
+
+def test_swin_block_traffic_improves_everywhere():
+    for name, kw in swin_t_stage_cases().items():
+        for shifted in (False, True):
+            fused = swin_block_traffic(**kw, shifted=shifted,
+                                       fused=True)["total"]
+            unfused = swin_block_traffic(**kw, shifted=shifted,
+                                         fused=False)["total"]
+            assert unfused / fused > 1.3, (name, shifted, fused, unfused)
