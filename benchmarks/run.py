@@ -1,7 +1,8 @@
 """Benchmark harness: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows and writes the PR 2
-block-pipeline artifact (BENCH_PR2.json).
+block-pipeline artifact (BENCH_PR2.json) and the PR 3 paged-serving
+artifact (BENCH_PR3.json).
 """
 from __future__ import annotations
 
@@ -13,6 +14,7 @@ def main() -> None:
     from benchmarks.kernel_bench import kernel_suite
     from benchmarks.paper_tables import ALL
     from benchmarks.roofline_report import roofline_report
+    from benchmarks.serve_bench import serve_bench
 
     rows = []
 
@@ -26,6 +28,7 @@ def main() -> None:
     kernel_suite(emit)
     roofline_report(emit)
     block_bench(emit, json_path="BENCH_PR2.json")
+    serve_bench(emit, json_path="BENCH_PR3.json")
     sys.stdout.flush()
 
 

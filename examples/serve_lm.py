@@ -1,4 +1,5 @@
-"""Serving example: continuous batching over a mixed request stream.
+"""Serving example: paged-KV continuous batching over a mixed request
+stream (bucketed prefill, block-table decode, page reclamation).
 
   PYTHONPATH=src python examples/serve_lm.py
 """
@@ -8,7 +9,7 @@ from repro.launch import serve as serve_driver
 def main():
     serve_driver.main(["--arch", "deepseek-7b", "--smoke",
                        "--requests", "10", "--slots", "4",
-                       "--max-new", "12"])
+                       "--max-new", "12", "--page-size", "16"])
 
 
 if __name__ == "__main__":

@@ -46,6 +46,28 @@ class RWKVConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class PagingConfig:
+    """Paged-KV serving geometry (vLLM-style block tables).
+
+    The serving engine carves each attention layer's KV storage into a
+    global pool of fixed-size pages ``(n_pages + 1, page_size, Hkv, hd)``
+    and maps every slot's logical positions onto physical pages through a
+    per-slot block table. Physical page index ``n_pages`` is the *trash
+    page*: block tables of idle slots point at it so lockstep decode
+    writes from retired slots land in storage nobody reads.
+
+    ``n_pages == 0`` means "size for full occupancy": the engine
+    allocates ``n_slots * ceil(max_len / page_size)`` real pages, i.e.
+    the same capacity as the dense lockstep caches; smaller values
+    oversubscribe and the engine defers admissions until pages free up.
+    """
+
+    page_size: int = 16            # tokens per KV page
+    n_pages: int = 0               # real pages per layer pool (0 => full)
+    min_bucket: int = 16           # smallest prefill padding bucket
+
+
+@dataclasses.dataclass(frozen=True)
 class BlockDef:
     """One layer inside a stage body.
 

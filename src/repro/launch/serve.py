@@ -1,7 +1,8 @@
-"""Serving driver: continuous-batching engine over synthetic requests.
+"""Serving driver: paged-KV continuous-batching engine over synthetic
+requests.
 
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --smoke \
-      --requests 8 --slots 4
+      --requests 8 --slots 4 --page-size 16
 """
 from __future__ import annotations
 
@@ -12,6 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, get_reduced
+from repro.core.block_traffic import serve_kv_traffic
+from repro.core.types import PagingConfig
 from repro.models import lm
 from repro.serve.engine import Engine, Request
 
@@ -24,6 +27,10 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--n-pages", type=int, default=0,
+                    help="real pages per layer pool (0 = full occupancy; "
+                         "smaller oversubscribes and defers admissions)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -32,7 +39,9 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     params, _ = lm.init_lm(key, cfg, dtype=jnp.float32)
     eng = Engine(params, cfg, n_slots=args.slots, max_len=args.max_len,
-                 eos_id=-1, temperature=args.temperature, seed=args.seed)
+                 eos_id=-1, temperature=args.temperature, seed=args.seed,
+                 paging=PagingConfig(page_size=args.page_size,
+                                     n_pages=args.n_pages))
     for i in range(args.requests):
         plen = 4 + (i % 8)
         prompt = jax.random.randint(jax.random.fold_in(key, i),
@@ -42,12 +51,26 @@ def main(argv=None):
     done = eng.run()
     dt = time.time() - t0
     total_new = sum(len(c.tokens) for c in done)
-    print(f"arch={cfg.name} slots={args.slots} requests={len(done)}")
+    print(f"arch={cfg.name} slots={args.slots} requests={len(done)} "
+          f"page_size={eng.page_size} pool={eng.pool.n_pages} pages")
     for c in sorted(done, key=lambda c: c.rid)[:4]:
         print(f"  rid={c.rid} prompt_len={c.prompt_len} "
-              f"tokens={c.tokens[:8]}... latency={c.latency_s*1e3:.0f}ms")
+              f"tokens={c.tokens[:8]}... latency={c.latency_s*1e3:.0f}ms "
+              f"ttft={c.ttft_s*1e3:.0f}ms")
     print(f"decoded {total_new} tokens in {dt:.2f}s "
           f"({total_new/dt:.1f} tok/s with continuous batching)")
+    traffic = serve_kv_traffic(eng.kv_trace, cfg, n_slots=args.slots,
+                               max_len=args.max_len,
+                               page_size=eng.page_size)
+    compiles = eng.compile_counts()
+    if traffic["dense_bytes"]:
+        kv = (f"KV bytes/trace: paged={traffic['paged_bytes']:,} "
+              f"dense={traffic['dense_bytes']:,} "
+              f"(x{traffic['ratio']:.2f} less)")
+    else:
+        kv = "KV traffic: n/a (no attention layers)"
+    print(f"{kv}; compiles: prefill={compiles['prefill']} "
+          f"step={compiles['step']} buckets={eng.buckets}")
 
 
 if __name__ == "__main__":

@@ -74,6 +74,21 @@ def cache_specs(window: int = 0):
     return KVCache(k=names, v=names)
 
 
+class PagedKVCache(NamedTuple):
+    """Per-layer paged KV pool. k/v: (n_pages + 1, page_size, Hkv, hd).
+
+    Physical pages are shared by every slot in the serving batch; the
+    logical order of a slot's tokens lives in the engine's block table
+    ((B, max_pages) int32: logical page ``l`` of row ``b`` is physical
+    page ``table[b, l]``). The last physical page is the trash page —
+    idle slots' tables point at it so lockstep writes from retired slots
+    never touch live storage. Sliding-window layers reuse the first
+    ``window // page_size`` table entries as a ring of pages.
+    """
+    k: jnp.ndarray
+    v: jnp.ndarray
+
+
 def _apply_rope(q, k, cfg: ModelConfig, positions):
     if cfg.rope == "none":
         return q, k
@@ -101,6 +116,29 @@ def _chunk_mask(base, chunk, q_pos, limit, causal, window):
     return mask
 
 
+def _online_update(carry, qg, kb, vb, mask, scale):
+    """One online-softmax accumulation step over a KV chunk — the shared
+    row-wise LSE math of the dense-chunk and page-gather paths.
+
+    carry: (m, l, acc) running max / denominator / output accumulator;
+    qg: (B,Hkv,g,Sq,hd); kb/vb: (B,Hkv,chunk,hd); mask broadcastable to
+    the (B,Hkv,g,Sq,chunk) score shape. q/k stay in model dtype; the
+    MXU accumulates in f32 (no materialized f32 operand copies).
+    """
+    m, l, acc = carry
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kb,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, -1e30)
+    m_new = jnp.maximum(m, jnp.max(s, -1))
+    p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+    alpha = jnp.exp(m - m_new)
+    l_new = l * alpha + jnp.sum(p, -1)
+    acc_new = acc * alpha[..., None] + jnp.einsum(
+        "bhgqk,bhkd->bhgqd", p.astype(vb.dtype), vb,
+        preferred_element_type=jnp.float32)
+    return m_new, l_new, acc_new
+
+
 def _chunked_fwd(q, k, v, limit, *, causal, window, q_offset, chunk):
     """Returns (out (B,Hq,Sq,hd), lse (B,Hkv,g,Sq) fp32)."""
     b, hq, sq, hd = q.shape
@@ -122,21 +160,11 @@ def _chunked_fwd(q, k, v, limit, *, causal, window, q_offset, chunk):
         # NB: the chunk base position rides in the carry (not the xs) so
         # XLA cannot hoist/stack the position masks for every chunk — the
         # hoisted form materializes a full Sq x Skv mask in HBM.
-        # q/k stay bf16; the MXU accumulates in f32 (no materialized
-        # f32 copies of the operands).
         m, l, acc, base = carry
         kb, vb = inp
-        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kb,
-                       preferred_element_type=jnp.float32) * scale
         mask = _chunk_mask(base, chunk, q_pos, limit, causal, window)
-        s = jnp.where(mask, s, -1e30)
-        m_new = jnp.maximum(m, jnp.max(s, -1))
-        p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
-        alpha = jnp.exp(m - m_new)
-        l_new = l * alpha + jnp.sum(p, -1)
-        acc_new = acc * alpha[..., None] + jnp.einsum(
-            "bhgqk,bhkd->bhgqd", p.astype(vb.dtype), vb,
-            preferred_element_type=jnp.float32)
+        m_new, l_new, acc_new = _online_update((m, l, acc), qg, kb, vb,
+                                               mask, scale)
         return (m_new, l_new, acc_new, base + chunk), None
 
     m0 = jnp.full((b, hkv, g, sq), -1e30, jnp.float32)
@@ -148,6 +176,51 @@ def _chunked_fwd(q, k, v, limit, *, causal, window, q_offset, chunk):
     out = acc / l[..., None]
     lse = m + jnp.log(l)
     return out.reshape(b, hq, sq, hd).astype(q.dtype), lse
+
+
+def _paged_fwd(q, k_pool, v_pool, pages, limit, *, chunk):
+    """Online-softmax over a paged KV pool — the same row-wise LSE math
+    as :func:`_chunked_fwd`, but each scan chunk *gathers* its KV rows
+    from the pool through the block table instead of slicing a dense
+    per-slot cache, so only a slot's live pages ever stream.
+
+    q: (B,Hq,Sq,hd); k_pool/v_pool: (n_pages, page_size, Hkv, hd);
+    pages: (B, n_logical_pages) int32 block table; limit: (B,) valid
+    token counts (logical positions >= limit are masked out).
+    Returns (out (B,Hq,Sq,hd), lse (B,Hkv,g,Sq) fp32).
+    """
+    b, hq, sq, hd = q.shape
+    _, ps, hkv, _ = k_pool.shape
+    g = hq // hkv
+    n_log = pages.shape[1]
+    ppc = max(1, min(n_log, chunk // ps))      # pages gathered per chunk
+    pad = (-n_log) % ppc
+    if pad:
+        # padding repeats the table's last entry; fully masked below
+        pages = jnp.pad(pages, ((0, 0), (0, pad)), mode="edge")
+    nc = (n_log + pad) // ppc
+    pid_chunks = pages.reshape(b, nc, ppc).transpose(1, 0, 2)  # (nc,B,ppc)
+    bases = jnp.arange(nc) * (ppc * ps)
+    qg = q.reshape(b, hkv, g, sq, hd)
+    scale = hd ** -0.5
+
+    def step(carry, inp):
+        pid, base = inp                                        # (B,ppc)
+        kb = jnp.take(k_pool, pid, axis=0)   # (B, ppc, ps, Hkv, hd)
+        vb = jnp.take(v_pool, pid, axis=0)
+        kb = kb.reshape(b, ppc * ps, hkv, hd).transpose(0, 2, 1, 3)
+        vb = vb.reshape(b, ppc * ps, hkv, hd).transpose(0, 2, 1, 3)
+        k_pos = base + jnp.arange(ppc * ps)                    # logical
+        mask = (k_pos[None, :] < limit[:, None])[:, None, None, None, :]
+        return _online_update(carry, qg, kb, vb, mask, scale), None
+
+    m0 = jnp.full((b, hkv, g, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (pid_chunks, bases))
+    l = jnp.maximum(l, 1e-30)
+    out = acc / l[..., None]
+    return out.reshape(b, hq, sq, hd).astype(q.dtype), m + jnp.log(l)
 
 
 def _flash_bwd(res, dout, *, causal, window, q_offset, chunk):
@@ -228,13 +301,24 @@ _chunked_attention_diff.defvjp(_cad_fwd, _cad_bwd)
 
 
 def chunked_attention(q, k, v, *, causal=True, window: int = 0,
-                      q_offset=0, kv_len=None, chunk: int = 1024):
+                      q_offset=0, kv_len=None, chunk: int = 1024,
+                      pages=None):
     """Online-softmax scan over KV chunks. q: (B,Hq,Sq,hd); k/v GQA.
 
     q_offset may be a traced scalar (decode). kv_len masks padded cache.
     The train path (static offset, no kv_len) uses the flash custom-VJP.
+
+    pages: optional (B, n_logical_pages) int32 block table. When given,
+    k/v are page *pools* (n_pages, page_size, Hkv, hd) and every chunk
+    gathers its KV rows through the table (paged decode; causality and
+    windowing are expressed through kv_len by the caller).
     """
     b = q.shape[0]
+    if pages is not None:
+        limit = jnp.broadcast_to(jnp.asarray(kv_len), (b,))
+        with jax.named_scope("rowwise_paged_attn"):
+            out, _ = _paged_fwd(q, k, v, pages, limit, chunk=chunk)
+        return out
     skv = k.shape[2]
     limit = skv if kv_len is None else kv_len
     limit = jnp.broadcast_to(jnp.asarray(limit), (b,))
@@ -323,6 +407,70 @@ def write_cache(cache: KVCache, k_new, v_new, pos, window: int = 0):
     return KVCache(k=upd(cache.k, k_new), v=upd(cache.v, v_new))
 
 
+def _decode_qkv(params, x, cfg: ModelConfig, lengths, norm):
+    """Shared decode-step projections: q/k/v heads for the new token,
+    RoPE'd at the token's position. x: (B, 1, d)."""
+    b = x.shape[0]
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if norm is not None:
+        q, k, v = ops.qkv_proj(
+            x, (params["wq"], params["wk"], params["wv"]), norm=norm)
+    else:
+        q = ops.matmul(x, params["wq"])
+        k = ops.matmul(x, params["wk"])
+        v = ops.matmul(x, params["wv"])
+    q = q.reshape(b, 1, hq, hd)
+    k = k.reshape(b, 1, hkv, hd)
+    v = v.reshape(b, 1, hkv, hd)
+    return _apply_rope(q, k, cfg, lengths[:, None]) + (v,)
+
+
+def write_pages(pool: PagedKVCache, k_new, v_new, pos, pages,
+                window: int = 0):
+    """Append the decode token's K/V (B,1,Hkv,hd) at logical position
+    ``pos`` (B,) through the block table ``pages`` (B, n_logical).
+    Windowed layers treat the first ``window // page_size`` table
+    entries as a ring of pages (the paged analog of the dense ring
+    buffer's ``pos % window`` write)."""
+    ps = pool.k.shape[1]
+    r = pos if window == 0 else pos % window
+    lp = jnp.clip(r // ps, 0, pages.shape[1] - 1)
+    off = r % ps
+    pid = jnp.take_along_axis(pages, lp[:, None], axis=1)[:, 0]   # (B,)
+    return PagedKVCache(
+        k=pool.k.at[pid, off].set(k_new[:, 0].astype(pool.k.dtype)),
+        v=pool.v.at[pid, off].set(v_new[:, 0].astype(pool.v.dtype)))
+
+
+def paged_decode_apply(params, x, pool: PagedKVCache, *, cfg: ModelConfig,
+                       lengths, pages, window: int = 0,
+                       norm: Optional[ops.NormSpec] = None, residual=None):
+    """One-token decode against a paged KV pool. x: (B, 1, d); lengths:
+    (B,) tokens already written; pages: (B, max_pages) block table.
+    Returns (out, new_pool). norm/residual as in :func:`apply`.
+
+    The attention core is the same online-softmax row-wise primitive as
+    the dense path, but each chunk gathers only the slot's live pages —
+    idle table entries point at the trash page and are masked by kv_len.
+    """
+    b = x.shape[0]
+    hq, hd = cfg.n_heads, cfg.head_dim
+    q, k, v = _decode_qkv(params, x, cfg, lengths, norm)
+    pool = write_pages(pool, k, v, lengths, pages, window)
+    ps = pool.k.shape[1]
+    if window:
+        tbl = pages[:, :max(window // ps, 1)]
+        kv_len = jnp.minimum(lengths + 1, window)
+    else:
+        tbl = pages
+        kv_len = lengths + 1
+    qh = q.transpose(0, 2, 1, 3)
+    out = chunked_attention(qh, pool.k, pool.v, causal=False, window=0,
+                            kv_len=kv_len, pages=tbl)
+    out = out.reshape(b, 1, hq * hd)
+    return ops.matmul(out, params["wo"], residual=residual), pool
+
+
 def decode_apply(params, x, cache: KVCache, *, cfg: ModelConfig,
                  lengths, window: int = 0,
                  norm: Optional[ops.NormSpec] = None, residual=None):
@@ -337,17 +485,7 @@ def decode_apply(params, x, cache: KVCache, *, cfg: ModelConfig,
     from repro.core import partitioning
     b, _, d = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    if norm is not None:
-        q, k, v = ops.qkv_proj(
-            x, (params["wq"], params["wk"], params["wv"]), norm=norm)
-    else:
-        q = ops.matmul(x, params["wq"])
-        k = ops.matmul(x, params["wk"])
-        v = ops.matmul(x, params["wv"])
-    q = q.reshape(b, 1, hq, hd)
-    k = k.reshape(b, 1, hkv, hd)
-    v = v.reshape(b, 1, hkv, hd)
-    q, k = _apply_rope(q, k, cfg, lengths[:, None])
+    q, k, v = _decode_qkv(params, x, cfg, lengths, norm)
 
     mesh = partitioning.active_mesh()
     use_sharded = (

@@ -76,8 +76,13 @@ class BlockIO(NamedTuple):
 
 def apply_block(blk: BlockDef, params, x, *, cfg: ModelConfig, mode: str,
                 positions=None, lengths=None, cache=None, enc_out=None,
+                pages=None,
                 window_override: Optional[int] = None) -> tuple:
-    """mode: 'train' | 'prefill' | 'decode'. Returns (x, BlockIO)."""
+    """mode: 'train' | 'prefill' | 'decode'. Returns (x, BlockIO).
+
+    pages: (B, max_pages) int32 block table for paged decode — required
+    when the decode cache's KV leaf is a :class:`PagedKVCache` pool.
+    """
     aux = jnp.zeros((), jnp.float32)
     new_cache = {}
     prefill_state = {}
@@ -93,9 +98,16 @@ def apply_block(blk: BlockDef, params, x, *, cfg: ModelConfig, mode: str,
         h = x if fuse else _norm_apply(params["norm1"], x, cfg)
         res = x if fuse else None
         if mode == "decode":
-            out, kv_new = attention.decode_apply(
-                params["attn"], h, cache["kv"], cfg=cfg, lengths=lengths,
-                window=window, norm=nspec, residual=res)
+            if isinstance(cache["kv"], attention.PagedKVCache):
+                out, kv_new = attention.paged_decode_apply(
+                    params["attn"], h, cache["kv"], cfg=cfg,
+                    lengths=lengths, pages=pages, window=window,
+                    norm=nspec, residual=res)
+            else:
+                out, kv_new = attention.decode_apply(
+                    params["attn"], h, cache["kv"], cfg=cfg,
+                    lengths=lengths, window=window, norm=nspec,
+                    residual=res)
             new_cache["kv"] = kv_new
         else:
             out, (k, v) = attention.apply(params["attn"], h, cfg=cfg,

@@ -96,8 +96,10 @@ def init_lm(key, cfg: ModelConfig, dtype=None):
 
 def _run_stage(stage: Stage, sp, x, *, cfg: ModelConfig, mode: str,
                positions=None, lengths=None, cache=None, enc_out=None,
-               causal=True, remat=False):
-    """Scan a stage. Returns (x, aux, new_cache_or_prefill_states)."""
+               pages=None, causal=True, remat=False):
+    """Scan a stage. Returns (x, aux, new_cache_or_prefill_states).
+    ``pages`` (the serving block table) is scan-invariant: every layer
+    indexes its own pool through the same per-slot table."""
     stacked, shared = sp["stacked"], sp["shared"]
 
     def body(carry, xs):
@@ -110,7 +112,7 @@ def _run_stage(stage: Stage, sp, x, *, cfg: ModelConfig, mode: str,
             csl = cache_slice.get(key) if cache_slice else None
             x, io = blocks.apply_block(
                 blk, bp, x, cfg=cfg, mode=mode, positions=positions,
-                lengths=lengths, cache=csl, enc_out=enc_out,
+                lengths=lengths, cache=csl, enc_out=enc_out, pages=pages,
                 window_override=None if causal else 0)
             aux = aux + io.aux
             if mode == "decode" and io.new_cache is not None:
@@ -233,14 +235,23 @@ def loss_fn(params, batch, cfg: ModelConfig, *, remat: bool = True):
 # ----------------------------------------------------------------------
 
 
-def _slot_cache_init(blk, cfg: ModelConfig, repeat, batch, alloc, dtype):
+def _slot_cache_init(blk, cfg: ModelConfig, repeat, batch, alloc, dtype,
+                     pool=None):
     c = {}
     if blk.mixer == "attn":
-        w = blk.window
-        s_alloc = min(alloc, w) if w else alloc
-        shape = (repeat, batch, s_alloc, cfg.n_kv_heads, cfg.head_dim)
-        c["kv"] = KVCache(k=jnp.zeros(shape, dtype),
-                          v=jnp.zeros(shape, dtype))
+        if pool is not None:
+            # paged serving: (R, n_pages + 1 trash, page_size, Hkv, hd)
+            n_pages, ps = pool
+            shape = (repeat, n_pages + 1, ps, cfg.n_kv_heads,
+                     cfg.head_dim)
+            c["kv"] = attention.PagedKVCache(k=jnp.zeros(shape, dtype),
+                                             v=jnp.zeros(shape, dtype))
+        else:
+            w = blk.window
+            s_alloc = min(alloc, w) if w else alloc
+            shape = (repeat, batch, s_alloc, cfg.n_kv_heads, cfg.head_dim)
+            c["kv"] = KVCache(k=jnp.zeros(shape, dtype),
+                              v=jnp.zeros(shape, dtype))
     elif blk.mixer == "mamba2":
         st = mamba2.init_state(cfg, batch, dtype)
         c["mamba"] = jax.tree.map(
@@ -261,23 +272,53 @@ def _slot_cache_init(blk, cfg: ModelConfig, repeat, batch, alloc, dtype):
     return c
 
 
-def init_cache(cfg: ModelConfig, batch: int, alloc: int, dtype=None):
-    """Zeroed cache for standalone decode (the decode dry-run cells)."""
-    dtype = dtype or jnp.dtype(cfg.dtype)
+def _init_cache_tree(cfg: ModelConfig, batch, alloc, dtype, pool=None):
     out = []
     for stage in cfg.stages():
         sc = {}
         for i, blk in enumerate(stage.body):
             c = _slot_cache_init(blk, cfg, stage.repeat, batch, alloc,
-                                 dtype)
+                                 dtype, pool=pool)
             if c:
                 sc[str(i)] = c
         out.append(sc)
     return out
 
 
+def init_cache(cfg: ModelConfig, batch: int, alloc: int, dtype=None):
+    """Zeroed cache for standalone decode (the decode dry-run cells)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    return _init_cache_tree(cfg, batch, alloc, dtype)
+
+
+def init_paged_cache(cfg: ModelConfig, n_slots: int, max_len: int, *,
+                     page_size: int = 16, n_pages: int = 0, dtype=None):
+    """Serving cache with paged attention KV: every attention layer gets
+    a page pool ``(R, n_pages + 1, page_size, Hkv, hd)`` indexed by the
+    engine's block tables (the +1 is the trash page idle slots write
+    to); recurrent / cross-attention state stays per-slot dense.
+
+    ``n_pages == 0`` sizes the pool for full occupancy
+    (``n_slots * ceil(max_len / page_size)`` real pages); pass less to
+    oversubscribe. Sliding windows must be page-aligned
+    (``window % page_size == 0``) so ring pages tile exactly.
+    """
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    max_pages = -(-max_len // page_size)
+    n_pages = n_pages or n_slots * max_pages
+    for stage in cfg.stages():
+        for blk in stage.body:
+            if blk.mixer == "attn" and blk.window:
+                assert blk.window % page_size == 0, (
+                    f"sliding window {blk.window} must be a multiple of "
+                    f"page_size {page_size}")
+    return _init_cache_tree(cfg, n_slots, max_len, dtype,
+                            pool=(n_pages, page_size))
+
+
 def cache_logical_specs(cache):
-    """Logical sharding names for every cache leaf (layer, batch, seq...)."""
+    """Logical sharding names for every cache leaf (layer, batch, seq...).
+    Dense caches only — paged pools are engine-local (single host)."""
     def spec(leaf):
         names = [None] * leaf.ndim
         names[0] = "layers"
@@ -337,11 +378,20 @@ def states_to_cache(cfg: ModelConfig, all_states, alloc: int):
     return out
 
 
-def prefill(params, tokens, cfg: ModelConfig, *,
-            extra: Optional[dict] = None, alloc: Optional[int] = None):
-    """Full-sequence prefill -> (last-position logits, cache)."""
+def prefill_states(params, tokens, cfg: ModelConfig, *,
+                   extra: Optional[dict] = None, last_pos=None):
+    """Full-sequence prefill -> (logits, raw per-layer scan states).
+
+    ``last_pos`` ((B,) int32) supports *bucketed* prefill: tokens are
+    right-padded to a static bucket length and the logits are gathered
+    at position ``last_pos - 1`` (the last real token). Causal attention
+    keeps every real position's activations and KV states untouched by
+    the tail padding; the pad tokens' own KV is dropped downstream by
+    the block-table length bookkeeping. Recurrent mixers (mamba/rwkv)
+    fold padding into their state, so recurrent archs must prefill at
+    exact lengths (``last_pos=None``).
+    """
     b, s = tokens.shape
-    alloc = alloc or s
     x = embed(params, tokens, cfg, extra)
     x = logical_constraint(x, "batch", "seq", "act_embed")
     if cfg.rope == "none" and not cfg.encdec:
@@ -356,14 +406,100 @@ def prefill(params, tokens, cfg: ModelConfig, *,
     x, _, states = _run_stages(params["stages"], cfg.stages(), x, cfg=cfg,
                                mode="prefill", positions=positions,
                                enc_out=enc_out, remat=False)
-    cache = states_to_cache(cfg, states, alloc)
-    logits = unembed(params, x[:, -1:], cfg)
-    return logits[:, 0], cache
+    if last_pos is None:
+        xl = x[:, -1:]
+    else:
+        idx = (jnp.asarray(last_pos, jnp.int32) - 1)[:, None, None]
+        xl = jnp.take_along_axis(
+            x, jnp.broadcast_to(idx, (b, 1, x.shape[-1])), axis=1)
+    logits = unembed(params, xl, cfg)
+    return logits[:, 0], states
 
 
-def decode_step(params, cache, tokens, lengths, cfg: ModelConfig):
+def prefill(params, tokens, cfg: ModelConfig, *,
+            extra: Optional[dict] = None, alloc: Optional[int] = None):
+    """Full-sequence prefill -> (last-position logits, dense cache)."""
+    logits, states = prefill_states(params, tokens, cfg, extra=extra)
+    return logits, states_to_cache(cfg, states, alloc or tokens.shape[1])
+
+
+# ----------------------------------------------------------------------
+# Paged prefill insert (the serving engine's slot-admission write)
+# ----------------------------------------------------------------------
+
+
+def _insert_slot(dst, src, slot):
+    """Write a (R, 1, ...) prefill state into batch row ``slot`` of a
+    (R, B, ...) per-slot cache leaf."""
+    starts = (0, slot) + (0,) * (dst.ndim - 2)
+    return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype), starts)
+
+
+def _insert_pages(pool, k, v, *, pages, plen, window, page_size):
+    """Scatter prefilled KV states (R, 1, S_pad, Hkv, hd) into the
+    slot's pages. Positions >= plen (padding) and, for windowed layers,
+    < plen - window (evicted from the ring) route out of range and are
+    dropped; stale rows left in a partial tail page are masked at read
+    time by the kv_len bookkeeping."""
+    ps = page_size
+    s_pad = k.shape[2]
+    p = jnp.arange(s_pad)
+    valid = p < plen
+    r = p
+    if window:
+        valid = valid & (p >= plen - window)
+        r = p % window
+    lp = jnp.clip(r // ps, 0, pages.shape[0] - 1)
+    pid = jnp.where(valid, pages[lp], pool.k.shape[1])   # OOB => dropped
+    off = r % ps
+    new_k = pool.k.at[:, pid, off].set(
+        k[:, 0].astype(pool.k.dtype), mode="drop")
+    new_v = pool.v.at[:, pid, off].set(
+        v[:, 0].astype(pool.v.dtype), mode="drop")
+    return attention.PagedKVCache(k=new_k, v=new_v)
+
+
+def insert_prefill(cfg: ModelConfig, cache, states, *, slot, pages, plen,
+                   page_size: int):
+    """Insert a single-request prefill into a paged serving cache: the
+    explicit replacement for the old shape-guessing ``_scatter_slot``
+    tree-map. Attention KV states scatter into the pages the engine
+    granted the slot (``pages``: (max_pages,) physical ids); recurrent /
+    cross-attention state writes batch row ``slot``. ``slot`` and
+    ``plen`` may be traced scalars, so one compiled program serves every
+    slot at a given bucket length."""
+    out = []
+    for si, stage in enumerate(cfg.stages()):
+        sc = {}
+        for i, blk in enumerate(stage.body):
+            key = str(i)
+            cur = (cache[si] or {}).get(key)
+            if cur is None:
+                continue
+            st = (states[si] or {}).get(key) or {}
+            c = dict(cur)
+            if "kv" in st:
+                k, v = st["kv"]
+                c["kv"] = _insert_pages(cur["kv"], k, v, pages=pages,
+                                        plen=plen, window=blk.window,
+                                        page_size=page_size)
+            for name in ("mamba", "rwkv_t", "rwkv_c", "cross_kv"):
+                if name in st:
+                    c[name] = jax.tree.map(
+                        lambda d, s: _insert_slot(d, s, slot),
+                        cur[name], st[name])
+            sc[key] = c
+        out.append(sc)
+    return out
+
+
+def decode_step(params, cache, tokens, lengths, cfg: ModelConfig,
+                pages=None):
     """One decode step. tokens: (B, 1); lengths: (B,) tokens in cache.
-    Returns (logits (B, vocab), new_cache)."""
+    Returns (logits (B, vocab), new_cache). ``pages`` ((B, max_pages)
+    int32 block tables) is required when ``cache`` holds paged KV pools
+    (see :func:`init_paged_cache`); every layer indexes its own pool
+    through the same table."""
     x = embed(params, tokens, cfg, None)
     if cfg.rope == "none" or cfg.encdec:
         pe = rope.sinusoidal_embedding(1 << 16, cfg.d_model)
@@ -371,6 +507,6 @@ def decode_step(params, cache, tokens, lengths, cfg: ModelConfig):
     x, _, new_cache = _run_stages(params["stages"], cfg.stages(), x,
                                   cfg=cfg, mode="decode", positions=None,
                                   lengths=lengths, cache=cache,
-                                  remat=False)
+                                  pages=pages, remat=False)
     logits = unembed(params, x, cfg)
     return logits[:, 0], new_cache

@@ -1,11 +1,22 @@
-"""Serving engine: batched prefill/decode with continuous batching.
+"""Serving engine: paged-KV continuous batching with bucketed prefill.
 
-vLLM-style slot management adapted to JAX static shapes: a fixed batch of
-`n_slots` sequences decodes in lockstep; when a sequence finishes, its
-slot is refilled from the request queue by (a) running a single-request
-prefill and (b) scattering the prefilled KV into the batched cache at
-that slot index. All jitted steps have static shapes, so continuous
-batching never recompiles.
+vLLM-style paging adapted to JAX static shapes: a fixed batch of
+``n_slots`` sequences decodes in lockstep, but attention KV lives in
+per-layer page *pools* shared by every slot — a retiring sequence hands
+its pages back to a free list and the refilling request takes only what
+its prompt needs, so short sequences never pay ``max_len`` attention
+traffic. All host <-> device choreography is compile-stable:
+
+  * decode is ONE jitted program — block tables, lengths, per-slot
+    temperatures and the active mask are traced operands;
+  * prefill pads prompts to a static bucket ladder (powers of two up to
+    ``max_len``) and fuses the prefill forward, the paged cache insert
+    and first-token sampling into one jitted program per bucket, so
+    continuous batching over arbitrary prompt lengths compiles at most
+    ``n_buckets + 1`` programs (archs with recurrent/MoE state prefill
+    at exact lengths — see ``paging.supports_bucketing``);
+  * the decode loop fetches exactly one device value per step (the
+    sampled tokens); sequence lengths are mirrored on the host.
 """
 from __future__ import annotations
 
@@ -16,10 +27,13 @@ from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.types import ModelConfig
+from repro.core.types import ModelConfig, PagingConfig
 from repro.models import lm
 from repro.serve import sampling
+from repro.serve.paging import (PagePool, bucket_for, default_buckets,
+                                page_aligned_size, supports_bucketing)
 
 
 @dataclasses.dataclass
@@ -27,6 +41,7 @@ class Request:
     rid: int
     prompt: jnp.ndarray              # (S,) int32
     max_new: int = 32
+    temperature: Optional[float] = None   # None => engine default
 
 
 @dataclasses.dataclass
@@ -34,106 +49,205 @@ class Completion:
     rid: int
     tokens: List[int]
     prompt_len: int
-    latency_s: float
-
-
-def _scatter_slot(cache, slot_cache, slot: int, prefill_len: int):
-    """Insert a single-request prefilled cache into batch slot `slot`."""
-    def ins(dst, src):
-        if dst.ndim >= 3 and src.shape[0] == dst.shape[0]:
-            # (R, B, ...) leaves: write batch index `slot`
-            if src.ndim == dst.ndim and src.shape[1] == 1:
-                if dst.ndim >= 4 and src.shape[2] <= dst.shape[2]:
-                    pad = [(0, 0)] * src.ndim
-                    pad[2] = (0, dst.shape[2] - src.shape[2])
-                    src = jnp.pad(src, pad)
-                return jax.lax.dynamic_update_slice(
-                    dst, src.astype(dst.dtype),
-                    (0, slot) + (0,) * (dst.ndim - 2))
-        return dst
-    return jax.tree.map(ins, cache, slot_cache)
+    latency_s: float                 # submission -> retirement
+    ttft_s: float = 0.0              # submission -> first token (queue
+    #                                  wait + prefill, the serving TTFT)
 
 
 class Engine:
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
                  max_len: int = 512, eos_id: int = 1,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 paging: PagingConfig = PagingConfig(),
+                 buckets: Optional[List[int]] = None):
         self.params, self.cfg = params, cfg
         self.n_slots, self.max_len, self.eos_id = n_slots, max_len, eos_id
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
-        self.cache = lm.init_cache(cfg, n_slots, max_len)
+
+        ps = page_aligned_size(paging.page_size, cfg)
+        self.page_size = ps
+        self.max_pages = -(-max_len // ps)
+        n_pages = paging.n_pages or n_slots * self.max_pages
+        self.pool = PagePool(n_pages, ps, n_slots, self.max_pages)
+        dtype = jnp.result_type(params["embed"])
+        self.cache = lm.init_paged_cache(cfg, n_slots, max_len,
+                                         page_size=ps, n_pages=n_pages,
+                                         dtype=dtype)
+        if buckets is not None:
+            if not supports_bucketing(cfg):
+                raise ValueError(
+                    f"{cfg.name} carries recurrent/MoE prefill state: "
+                    "padded buckets are inexact, prompts must prefill at "
+                    "exact lengths (omit `buckets`)")
+            self.buckets: Optional[List[int]] = sorted(buckets)
+            if self.buckets[-1] < max_len:
+                raise ValueError(
+                    f"largest bucket {self.buckets[-1]} must cover "
+                    f"max_len={max_len} (every admissible prompt length)")
+        elif supports_bucketing(cfg):
+            self.buckets = default_buckets(max_len, paging.min_bucket)
+        else:
+            self.buckets = None      # exact-length prefill (recurrent/MoE)
+
         self.lengths = jnp.zeros((n_slots,), jnp.int32)
-        self.active = [None] * n_slots           # Request or None
+        self._host_len = np.zeros((n_slots,), np.int64)
+        self._last = jnp.zeros((n_slots, 1), jnp.int32)
+        self._temps = jnp.zeros((n_slots,), jnp.float32)
+        self._tables_dev = jnp.asarray(self.pool.tables)
+        self._tables_version = self.pool.version
+        self.active: List[Optional[Request]] = [None] * n_slots
         self.out_tokens: List[List[int]] = [[] for _ in range(n_slots)]
         self.started = [0.0] * n_slots
-        self.queue: deque = deque()
+        self.ttft = [0.0] * n_slots
+        self.queue: deque = deque()  # (Request, submission wall time)
+        self._prefill_lens: set = set()   # distinct padded lengths seen
+        self._stepped = False
         self.completed: List[Completion] = []
-        self._last = jnp.zeros((n_slots, 1), jnp.int32)
+        self.kv_trace: List[List[int]] = []   # per-step live slot lengths
 
-        def step_fn(params, cache, tokens, lengths, key):
+        def step_fn(params, cache, tokens, lengths, tables, temps, active,
+                    key):
             logits, cache = lm.decode_step(params, cache, tokens, lengths,
-                                           cfg)
-            if temperature == 0.0:
-                nxt = sampling.greedy(logits)
-            else:
-                nxt = sampling.sample(logits, key,
-                                      temperature=temperature)
-            return nxt, cache
+                                           cfg, pages=tables)
+            nxt = sampling.sample(logits, key, temperature=temps)
+            # idle slots stay parked at length 0 writing the trash page
+            new_lengths = jnp.where(active, lengths + 1, 0)
+            return nxt, new_lengths, cache
 
-        self._step = jax.jit(step_fn)
-        self._prefill = jax.jit(
-            lambda p, t: lm.prefill(p, t, cfg, alloc=max_len))
+        def admit_fn(params, cache, lengths, last, tokens, slot, pages_row,
+                     plen, temp, key):
+            logits, states = lm.prefill_states(params, tokens, cfg,
+                                               last_pos=plen[None])
+            cache = lm.insert_prefill(cfg, cache, states, slot=slot,
+                                      pages=pages_row, plen=plen,
+                                      page_size=ps)
+            first = sampling.sample(logits, key, temperature=temp[None])[0]
+            lengths = lengths.at[slot].set(plen)
+            last = last.at[slot, 0].set(first)
+            return first, cache, lengths, last
+
+        # donate the cache: the pool update aliases in place instead of
+        # copying the whole (R, n_pages+1, ps, Hkv, hd) pools every step
+        self._step = jax.jit(step_fn, donate_argnums=(1,))
+        self._admit = jax.jit(admit_fn, donate_argnums=(1,))
+
+    # ------------------------------------------------------------------
 
     def submit(self, req: Request):
-        self.queue.append(req)
+        plen = int(req.prompt.shape[0])
+        if not 0 < plen < self.max_len:
+            raise ValueError(f"prompt of length {plen} cannot decode "
+                             f"within max_len={self.max_len}")
+        if req.max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {req.max_new} "
+                             "(every request produces the prefill token)")
+        self.queue.append((req, time.perf_counter()))
 
-    def _fill_slots(self):
+    def compile_counts(self) -> dict:
+        """Compiled-program counts of the two serving entry points —
+        jax's jit cache size when available (ground truth), else the
+        host-side proxy (distinct padded prefill lengths map 1:1 to
+        compiled admit programs; one decode program once any step ran)."""
+        def n(fn, fallback):
+            return fn._cache_size() if hasattr(fn, "_cache_size") \
+                else fallback
+        return {"prefill": n(self._admit, len(self._prefill_lens)),
+                "step": n(self._step, int(self._stepped))}
+
+    def _req_temp(self, req: Request) -> float:
+        return self.temperature if req.temperature is None else \
+            req.temperature
+
+    def _fill_slots(self) -> int:
+        admitted = 0
         for slot in range(self.n_slots):
-            if self.active[slot] is None and self.queue:
-                req = self.queue.popleft()
-                t0 = time.perf_counter()
-                logits, pcache = self._prefill(self.params,
-                                               req.prompt[None])
-                plen = int(req.prompt.shape[0])
-                self.cache = _scatter_slot(self.cache, pcache, slot, plen)
-                first = int(jnp.argmax(logits[0]))
-                self.active[slot] = req
-                self.out_tokens[slot] = [first]
-                self.started[slot] = t0
-                self.lengths = self.lengths.at[slot].set(plen)
-                self._last = self._last.at[slot, 0].set(first)
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req, t0 = self.queue[0]   # t0: submission time (TTFT base)
+            plen = int(req.prompt.shape[0])
+            # KV rows ever written: the prompt plus one row per decode
+            # step (the final sampled token is returned, never written)
+            worst = min(self.max_len, plen + req.max_new - 1)
+            if not self.pool.can_admit(worst):
+                break                # FIFO: wait for pages, don't skip
+            self.queue.popleft()
+            admitted += 1
+            self.pool.admit(slot, worst)
+            self.pool.ensure(slot, plen)
+            bl = bucket_for(plen, self.buckets) if self.buckets else plen
+            self._prefill_lens.add(bl)
+            padded = np.zeros((1, bl), np.int32)
+            padded[0, :plen] = np.asarray(req.prompt)
+            self.key, sk = jax.random.split(self.key)
+            first, self.cache, self.lengths, self._last = self._admit(
+                self.params, self.cache, self.lengths, self._last,
+                jnp.asarray(padded), jnp.int32(slot),
+                jnp.asarray(self.pool.tables[slot]), jnp.int32(plen),
+                jnp.float32(self._req_temp(req)), sk)
+            self._temps = self._temps.at[slot].set(self._req_temp(req))
+            self.active[slot] = req
+            self.out_tokens[slot] = [int(first)]
+            self.started[slot] = t0
+            self.ttft[slot] = time.perf_counter() - t0
+            self._host_len[slot] = plen
+            # the prefill-sampled token can already finish the request
+            if self.out_tokens[slot][0] == self.eos_id or req.max_new <= 1:
+                self._retire(slot)
+        return admitted
 
     def _retire(self, slot):
         req = self.active[slot]
         self.completed.append(Completion(
             rid=req.rid, tokens=list(self.out_tokens[slot]),
             prompt_len=int(req.prompt.shape[0]),
-            latency_s=time.perf_counter() - self.started[slot]))
+            latency_s=time.perf_counter() - self.started[slot],
+            ttft_s=self.ttft[slot]))
+        self.pool.release(slot)
         self.active[slot] = None
         self.out_tokens[slot] = []
+        self._host_len[slot] = 0
 
     def run(self, max_steps: int = 10_000) -> List[Completion]:
         """Continuous-batching loop until queue + slots drain."""
         steps = 0
-        while (any(a is not None for a in self.active) or self.queue):
-            self._fill_slots()
-            if not any(a is not None for a in self.active):
+        self.kv_trace = []           # fresh trace per run (bounded host mem)
+        while any(a is not None for a in self.active) or self.queue:
+            admitted = self._fill_slots()
+            active = np.asarray([a is not None for a in self.active])
+            if not active.any():
+                if self.queue and not admitted:
+                    raise RuntimeError(
+                        "request needs more KV pages than the pool holds "
+                        f"({self.pool.n_pages} x {self.page_size} tokens)")
+                if self.queue:
+                    continue         # everything admitted retired at once
                 break
+            for slot in np.flatnonzero(active):
+                # cover the position this step writes (lazy tail alloc)
+                self.pool.ensure(int(slot), int(self._host_len[slot]) + 1)
+            if self.pool.version != self._tables_version:
+                self._tables_dev = jnp.asarray(self.pool.tables)
+                self._tables_version = self.pool.version
             self.key, sk = jax.random.split(self.key)
-            nxt, self.cache = self._step(self.params, self.cache,
-                                         self._last, self.lengths, sk)
-            self.lengths = self.lengths + 1
+            nxt, self.lengths, self.cache = self._step(
+                self.params, self.cache, self._last, self.lengths,
+                self._tables_dev, self._temps, jnp.asarray(active), sk)
             self._last = nxt[:, None]
-            for slot in range(self.n_slots):
+            self._stepped = True
+            nxt_host = jax.device_get(nxt)  # the step's ONE device fetch
+            self._host_len[active] += 1
+            self._host_len[~active] = 0
+            self.kv_trace.append(
+                [int(self._host_len[s]) for s in np.flatnonzero(active)])
+            for slot in np.flatnonzero(active):
+                slot = int(slot)
                 req = self.active[slot]
-                if req is None:
-                    continue
-                tok = int(nxt[slot])
+                tok = int(nxt_host[slot])
                 self.out_tokens[slot].append(tok)
                 done = (tok == self.eos_id
                         or len(self.out_tokens[slot]) >= req.max_new
-                        or int(self.lengths[slot]) >= self.max_len - 1)
+                        or int(self._host_len[slot]) >= self.max_len - 1)
                 if done:
                     self._retire(slot)
             steps += 1

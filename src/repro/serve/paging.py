@@ -1,0 +1,122 @@
+"""Host-side paged-KV bookkeeping: page allocator + prefill buckets.
+
+The device side (``models/lm.py`` / ``models/attention.py``) only ever
+sees a page *pool* per attention layer and a per-slot block table; this
+module owns the mutable host state that fills those tables:
+
+  * :class:`PagePool` — a free-list allocator over the physical pages.
+    Admission is *reservation-based*: a request is admitted only when
+    the pool can cover its worst-case length (prompt + max_new, capped
+    at max_len), so decode can allocate tail pages lazily and never
+    deadlocks mid-sequence. Retiring a slot returns its pages to the
+    free list and points its table row back at the trash page.
+  * bucket policy — prompts are padded to a small static set of lengths
+    (powers of two up to max_len) so continuous batching compiles
+    O(n_buckets) prefill programs instead of O(unique prompt lengths).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core.types import ModelConfig
+
+
+def default_buckets(max_len: int, min_bucket: int = 16) -> List[int]:
+    """Power-of-two prefill padding lengths: min_bucket, ..., max_len."""
+    out, b = [], min_bucket
+    while b < max_len:
+        out.append(b)
+        b *= 2
+    out.append(max_len)
+    return out
+
+
+def bucket_for(plen: int, buckets: List[int]) -> int:
+    """Smallest bucket covering a prompt of length ``plen``."""
+    for b in buckets:
+        if plen <= b:
+            return b
+    raise ValueError(f"prompt length {plen} exceeds largest bucket "
+                     f"{buckets[-1]}")
+
+
+def supports_bucketing(cfg: ModelConfig) -> bool:
+    """Tail-padding a prompt is exact only when every position's state
+    is causal-attention KV: recurrent mixers (mamba/rwkv) fold the pad
+    tokens into their running state, MoE token-choice routing competes
+    padding against real tokens for expert capacity, and enc-dec /
+    vision frontends consume positional extras. Those archs prefill at
+    exact lengths instead (one compile per distinct prompt length)."""
+    if cfg.encdec or cfg.frontend != "none" or cfg.moe is not None:
+        return False
+    return all(blk.mixer == "attn" and blk.ffn in ("mlp", "none")
+               and not blk.cross_attn
+               for stage in cfg.stages() for blk in stage.body)
+
+
+def page_aligned_size(page_size: int, cfg: ModelConfig) -> int:
+    """Largest size <= page_size dividing every sliding window in cfg
+    (ring pages must tile the window exactly)."""
+    ps = page_size
+    for stage in cfg.stages():
+        for blk in stage.body:
+            if blk.mixer == "attn" and blk.window:
+                ps = int(np.gcd(ps, blk.window))
+    return max(ps, 1)
+
+
+class PagePool:
+    """Free-list page allocator with per-slot block tables.
+
+    Physical ids 0..n_pages-1 are real pages; id ``n_pages`` is the
+    trash page every idle table entry points at (lockstep decode writes
+    from retired slots land there). ``tables`` is the host mirror the
+    engine ships to the device each time it changes.
+    """
+
+    def __init__(self, n_pages: int, page_size: int, n_slots: int,
+                 max_pages: int):
+        self.n_pages, self.page_size = n_pages, page_size
+        self.trash = n_pages
+        self.free: List[int] = list(range(n_pages - 1, -1, -1))
+        self.tables = np.full((n_slots, max_pages), self.trash, np.int32)
+        self.n_alloc = np.zeros(n_slots, np.int64)
+        self.reserved = np.zeros(n_slots, np.int64)
+        self.version = 0              # bumped on any table change
+
+    def _pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        """True when the free list can cover a worst-case ``n_tokens``
+        sequence on top of every live slot's outstanding reservation."""
+        outstanding = int((self.reserved - self.n_alloc).sum())
+        return len(self.free) - outstanding >= self._pages_for(n_tokens)
+
+    def admit(self, slot: int, n_tokens: int) -> None:
+        """Reserve worst-case capacity for a slot (caller checked
+        :meth:`can_admit`); pages are drawn lazily by :meth:`ensure`."""
+        assert self.n_alloc[slot] == 0 and self.reserved[slot] == 0
+        self.reserved[slot] = self._pages_for(n_tokens)
+
+    def ensure(self, slot: int, n_tokens: int) -> None:
+        """Grow the slot's table to cover ``n_tokens`` positions."""
+        need = min(self._pages_for(n_tokens), self.tables.shape[1])
+        while self.n_alloc[slot] < need:
+            self.tables[slot, self.n_alloc[slot]] = self.free.pop()
+            self.n_alloc[slot] += 1
+            self.version += 1
+
+    def release(self, slot: int) -> None:
+        """Retire a slot: pages back to the free list, table to trash."""
+        n = int(self.n_alloc[slot])
+        self.free.extend(int(p) for p in self.tables[slot, :n])
+        self.tables[slot, :] = self.trash
+        self.n_alloc[slot] = 0
+        self.reserved[slot] = 0
+        self.version += 1
+
+    def live_pages(self) -> int:
+        return int(self.n_alloc.sum())

@@ -9,12 +9,30 @@ def greedy(logits: jnp.ndarray) -> jnp.ndarray:
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
-def sample(logits: jnp.ndarray, key, *, temperature: float = 1.0,
+def sample(logits: jnp.ndarray, key, *, temperature=1.0,
            top_k: int = 0, top_p: float = 1.0) -> jnp.ndarray:
-    """logits: (B, V) -> (B,) int32."""
-    if temperature == 0.0:
-        return greedy(logits)
-    logits = logits / temperature
+    """logits: (B, V) -> (B,) int32.
+
+    ``temperature`` may be a python float or a per-row (B,) array —
+    continuous batching mixes greedy and sampled requests in one
+    lockstep step, and a traced temperature operand keeps that a single
+    compiled program. Rows with temperature <= 0 decode greedily.
+    """
+    if jnp.ndim(temperature) == 0 and not isinstance(temperature,
+                                                     jax.core.Tracer):
+        temperature = float(temperature)     # 0-d np/jnp scalars
+    per_row = not isinstance(temperature, (int, float))
+    if not per_row:
+        if temperature <= 0.0:
+            return greedy(logits)
+        logits = logits / temperature
+    else:
+        # (B,) array or traced scalar: keep one compiled program with
+        # the where-based greedy fallback per row
+        t = jnp.broadcast_to(jnp.asarray(temperature, logits.dtype),
+                             logits.shape[:1])
+        raw = logits
+        logits = logits / jnp.maximum(t, 1e-6)[:, None]
     if top_k > 0:
         kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
         logits = jnp.where(logits < kth, -jnp.inf, logits)
@@ -25,4 +43,7 @@ def sample(logits: jnp.ndarray, key, *, temperature: float = 1.0,
         cutoff_idx = jnp.sum(cum < top_p, axis=-1, keepdims=True)
         cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
         logits = jnp.where(logits < cutoff, -jnp.inf, logits)
-    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+    toks = jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+    if per_row:
+        return jnp.where(t <= 0.0, greedy(raw), toks)
+    return toks

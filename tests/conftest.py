@@ -1,7 +1,24 @@
+import jax.numpy as jnp
 import numpy as np
 import pytest
+
+from repro.models import lm
 
 
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+def manual_greedy(params, cfg, prompt, n_new, max_len):
+    """Dense-cache greedy decode: the serving engines' parity oracle."""
+    logits, cache = lm.prefill(params, prompt[None], cfg, alloc=max_len)
+    toks = [int(jnp.argmax(logits[0]))]
+    lengths = jnp.asarray([prompt.shape[0]], jnp.int32)
+    for _ in range(n_new - 1):
+        lg, cache = lm.decode_step(
+            params, cache, jnp.asarray([[toks[-1]]], jnp.int32),
+            lengths, cfg)
+        toks.append(int(jnp.argmax(lg[0])))
+        lengths = lengths + 1
+    return toks

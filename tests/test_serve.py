@@ -3,25 +3,14 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from conftest import manual_greedy
+
 from repro.configs import REDUCED
 from repro.models import lm
 from repro.serve import sampling
 from repro.serve.engine import Engine, Request
 
 pytestmark = pytest.mark.slow  # engine decode loops, ~20s+ on CPU
-
-
-def _manual_greedy(params, cfg, prompt, n_new, max_len):
-    logits, cache = lm.prefill(params, prompt[None], cfg, alloc=max_len)
-    toks = [int(jnp.argmax(logits[0]))]
-    lengths = jnp.asarray([prompt.shape[0]], jnp.int32)
-    for _ in range(n_new - 1):
-        lg, cache = lm.decode_step(
-            params, cache, jnp.asarray([[toks[-1]]], jnp.int32),
-            lengths, cfg)
-        toks.append(int(jnp.argmax(lg[0])))
-        lengths = lengths + 1
-    return toks
 
 
 def test_engine_matches_manual_decode():
@@ -39,7 +28,7 @@ def test_engine_matches_manual_decode():
     assert len(done) == 3
     by_rid = {c.rid: c for c in done}
     for i, p in enumerate(prompts):
-        want = _manual_greedy(params, cfg, p, n_new, 32)
+        want = manual_greedy(params, cfg, p, n_new, 32)
         assert by_rid[i].tokens == want, (i, by_rid[i].tokens, want)
 
 
