@@ -1,0 +1,170 @@
+"""PR 4 bench: decode-step projection-weight traffic, pre-fused param
+layout vs the PR 2 per-call concat regime.
+
+Emits ``bench.decode.*`` CSV rows and writes ``BENCH_PR4.json``
+(uploaded as a CI artifact) with three sections:
+
+  * ``weight_traffic`` — modeled HBM bytes for one attn+MLP block
+    decode step at M = n_slots rows (``core/block_traffic.py``), for
+    the smoke geometry AND the full-size deepseek-7b geometry: the
+    pre-fused layout streams the stored wqkv / wgi panels once, the
+    per-call regime additionally read the split parts and wrote the
+    concatenated panel every step.
+  * ``jaxpr``          — audit of the traced decode step (dense and
+    paged): number of weight-sized concatenates left. Must be 0 — the
+    acceptance criterion the tests also assert.
+  * ``wall_us``        — measured wall time of one jitted decode step
+    (n_slots rows, paged cache) on this host's default impl.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import REDUCED
+from repro.configs.deepseek_7b import CONFIG as DEEPSEEK_FULL
+from repro.core.block_traffic import decode_weight_traffic_cfg
+from repro.models import lm
+
+N_SLOTS = 4
+
+
+def weight_concat_eqns(jaxpr_like, min_bytes: int):
+    """Walk a (closed) jaxpr recursively and return the output avals of
+    every ``concatenate`` whose result is at least ``min_bytes`` — the
+    signature of a per-call projection-weight fuse. Activation-sized
+    concats (rope rotations, conv states) stay below any projection
+    panel's size."""
+    found = []
+    seen = set()
+
+    def walk(jaxpr):
+        if id(jaxpr) in seen:
+            return
+        seen.add(id(jaxpr))
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "concatenate":
+                aval = eqn.outvars[0].aval
+                if aval.size * aval.dtype.itemsize >= min_bytes:
+                    found.append(aval)
+            for v in eqn.params.values():
+                for j in (v if isinstance(v, (tuple, list)) else (v,)):
+                    if hasattr(j, "eqns"):              # Jaxpr
+                        walk(j)
+                    elif hasattr(j, "jaxpr"):           # ClosedJaxpr
+                        walk(j.jaxpr)
+
+    walk(jaxpr_like.jaxpr if hasattr(jaxpr_like, "jaxpr") else jaxpr_like)
+    return found
+
+
+def min_weight_bytes(cfg, itemsize: int = 4) -> int:
+    """Size of the smallest seed-layout projection leaf (d x Hkv*hd) —
+    the audit threshold: any concat at least this large is weight-sized."""
+    return cfg.d_model * cfg.n_kv_heads * cfg.head_dim * itemsize
+
+
+def _traffic_section():
+    out = {}
+    for name, cfg in (("deepseek_smoke", REDUCED["deepseek-7b"]()),
+                      ("deepseek_7b", DEEPSEEK_FULL)):
+        fused = decode_weight_traffic_cfg(cfg, n_slots=N_SLOTS,
+                                          prefused=True)
+        percall = decode_weight_traffic_cfg(cfg, n_slots=N_SLOTS,
+                                            prefused=False)
+        out[name] = {
+            "prefused_weight_bytes": fused["weight_bytes"],
+            "percall_weight_bytes": percall["weight_bytes"],
+            "weight_ratio": percall["weight_bytes"] / fused["weight_bytes"],
+            "prefused_total": fused["total"],
+            "percall_total": percall["total"],
+            "total_ratio": percall["total"] / fused["total"],
+            "prefused_ops": [(n, t, w) for n, t, w in fused["ops"]],
+            "percall_ops": [(n, t, w) for n, t, w in percall["ops"]],
+        }
+    return out
+
+
+def _jaxpr_section():
+    cfg = REDUCED["deepseek-7b"]()
+    key = jax.random.PRNGKey(0)
+    params, _ = lm.init_lm(key, cfg, dtype=jnp.float32)
+    tok = jnp.zeros((N_SLOTS, 1), jnp.int32)
+    lengths = jnp.full((N_SLOTS,), 3, jnp.int32)
+    thr = min_weight_bytes(cfg)
+
+    dense_cache = lm.init_cache(cfg, N_SLOTS, 32, jnp.float32)
+    dense = jax.make_jaxpr(
+        lambda p, c, t, ln: lm.decode_step(p, c, t, ln, cfg))(
+            params, dense_cache, tok, lengths)
+
+    paged_cache = lm.init_paged_cache(cfg, N_SLOTS, 32, page_size=8)
+    tables = jnp.zeros((N_SLOTS, 4), jnp.int32)
+    paged = jax.make_jaxpr(
+        lambda p, c, t, ln, tb: lm.decode_step(p, c, t, ln, cfg,
+                                               pages=tb))(
+            params, paged_cache, tok, lengths, tables)
+
+    return {"threshold_bytes": thr,
+            "dense_weight_concats": len(weight_concat_eqns(dense, thr)),
+            "paged_weight_concats": len(weight_concat_eqns(paged, thr))}
+
+
+def _wall_us(iters: int = 10):
+    cfg = REDUCED["deepseek-7b"]()
+    key = jax.random.PRNGKey(0)
+    params, _ = lm.init_lm(key, cfg, dtype=jnp.float32)
+    cache = lm.init_paged_cache(cfg, N_SLOTS, 32, page_size=8,
+                                dtype=jnp.float32)
+    tables = jnp.tile(jnp.arange(4, dtype=jnp.int32)[None], (N_SLOTS, 1))
+    tok = jnp.zeros((N_SLOTS, 1), jnp.int32)
+    lengths = jnp.full((N_SLOTS,), 3, jnp.int32)
+
+    step = jax.jit(lambda p, c, t, ln, tb: lm.decode_step(p, c, t, ln,
+                                                          cfg, pages=tb))
+    out = jax.block_until_ready(step(params, cache, tok, lengths, tables))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(step(params, cache, tok, lengths,
+                                         tables))
+    del out
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def decode_bench(emit, json_path=None):
+    traffic = _traffic_section()
+    for name, row in traffic.items():
+        emit(f"bench.decode.weights_{name}", 0,
+             f"prefused={row['prefused_weight_bytes']} "
+             f"percall={row['percall_weight_bytes']} "
+             f"ratio={row['weight_ratio']:.2f}")
+    jx = _jaxpr_section()
+    emit("bench.decode.weight_concats", 0,
+         f"dense={jx['dense_weight_concats']} "
+         f"paged={jx['paged_weight_concats']} (must be 0)")
+    wall = _wall_us()
+    emit("bench.decode.step_wall", wall, f"{N_SLOTS}-slot paged step us")
+    result = {"weight_traffic": traffic, "jaxpr": jx,
+              "wall_us": {"paged_step": wall, "n_slots": N_SLOTS}}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(result, f, indent=2)
+    return result
+
+
+def main():
+    json_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_PR4.json"
+
+    def emit(name, us, derived):
+        print(f"{name},{us:.1f},{derived}")
+
+    decode_bench(emit, json_path=json_path)
+    print(f"wrote {json_path}")
+
+
+if __name__ == "__main__":
+    main()

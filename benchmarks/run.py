@@ -1,8 +1,9 @@
 """Benchmark harness: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows and writes the PR 2
-block-pipeline artifact (BENCH_PR2.json) and the PR 3 paged-serving
-artifact (BENCH_PR3.json).
+block-pipeline artifact (BENCH_PR2.json), the PR 3 paged-serving
+artifact (BENCH_PR3.json) and the PR 4 decode weight-traffic artifact
+(BENCH_PR4.json).
 """
 from __future__ import annotations
 
@@ -11,6 +12,7 @@ import sys
 
 def main() -> None:
     from benchmarks.block_bench import block_bench
+    from benchmarks.decode_bench import decode_bench
     from benchmarks.kernel_bench import kernel_suite
     from benchmarks.paper_tables import ALL
     from benchmarks.roofline_report import roofline_report
@@ -29,6 +31,7 @@ def main() -> None:
     roofline_report(emit)
     block_bench(emit, json_path="BENCH_PR2.json")
     serve_bench(emit, json_path="BENCH_PR3.json")
+    decode_bench(emit, json_path="BENCH_PR4.json")
     sys.stdout.flush()
 
 

@@ -20,15 +20,24 @@ Both regimes price each matmul with today's fused in-kernel adder tree
 traffic this PR removes. Used by ``benchmarks/block_bench.py`` (the
 BENCH_PR2.json artifact) and the acceptance test.
 
-The serving-side section at the bottom models decode-step KV traffic
-the same way for the paged engine (PR 3): dense lockstep caches stream
-``n_slots x max_len`` rows per layer per step, block-table decode
-streams only each live sequence's pages. Used by
-``benchmarks/serve_bench.py`` (BENCH_PR3.json) and its acceptance test.
+The serving-side section models decode-step KV traffic the same way
+for the paged engine (PR 3): dense lockstep caches stream ``n_slots x
+max_len`` rows per layer per step, block-table decode streams only
+each live sequence's pages. Used by ``benchmarks/serve_bench.py``
+(BENCH_PR3.json) and its acceptance test.
+
+The decode weight-traffic section prices the PR 4 param-layout
+migration: with wqkv / wgi stored pre-fused the kernels stream the
+panels straight from the param tree; the PR 2 per-call regime instead
+concatenated the sibling weights every call, paying a panel-sized
+write + read on every decode step. Used by
+``benchmarks/decode_bench.py`` (BENCH_PR4.json) and its acceptance
+test.
 """
 from __future__ import annotations
 
 from repro.core.rowwise import plan_matmul
+from repro.core.types import GATED_ACTS
 
 FP32 = 4
 
@@ -99,6 +108,75 @@ def swin_block_traffic(*, grid_h: int, grid_w: int, c: int, heads: int,
         ops.append(("residual2", _ew_add_io(m, c, db)))
 
     return {"ops": ops, "total": sum(b for _, b in ops)}
+
+
+# ----------------------------------------------------------------------
+# Decode-step projection-weight traffic: pre-fused param layout (PR 4)
+# vs the per-call sibling-panel concat regime (PR 2)
+# ----------------------------------------------------------------------
+
+
+def decode_weight_traffic(*, n_slots: int, d_model: int, n_heads: int,
+                          n_kv_heads: int, head_dim: int, d_ff: int,
+                          gated: bool = True, dtype_bytes: int = 2,
+                          prefused: bool = True) -> dict:
+    """Modeled HBM bytes for ONE attn+MLP block decode step at
+    M = n_slots rows — the regime where weight streaming dwarfs the
+    activation traffic (ViTA's edge-transformer observation).
+
+    ``prefused=True`` is the PR 4 param layout: wqkv and wgi live as
+    single leaves, so the kernels stream the stored panels directly and
+    the only weight traffic is the panel fetch itself.
+    ``prefused=False`` prices the PR 2 per-call regime: the sibling
+    projections are separate leaves that ``ops.qkv_proj`` /
+    ``ops.gate_up_proj`` fuse per call — XLA reads every part and
+    writes the concatenated panel before the kernel fetches it back,
+    an extra 2x the panel's (true, unpadded) bytes of pure
+    weight-stream traffic on EVERY decode step.
+
+    Returns {"ops": [(name, total_bytes, weight_bytes)],
+             "total": int, "weight_bytes": int}.
+    """
+    db = dtype_bytes
+    m = n_slots
+    qo, kvo = n_heads * head_dim, n_kv_heads * head_dim
+    rows = []
+    weight_total = 0
+
+    def mm(name, k, n, *, n_weights=1, cat=False, **kw):
+        nonlocal weight_total
+        plan = plan_matmul(m, k, n, dtype_bytes=db, out_bytes=db,
+                           n_weights=n_weights, **kw)
+        w_factor = 1 if plan.k_splits == 1 else plan.m_pad // plan.bm
+        w_bytes = plan.k_pad * plan.n_pad * db * n_weights * w_factor
+        total = plan.bytes_moved
+        if cat and not prefused:
+            extra = 2 * k * n * n_weights * db     # parts read + cat write
+            total += extra
+            w_bytes += extra
+        weight_total += w_bytes
+        rows.append((name, total, w_bytes))
+
+    mm("qkv", d_model, qo + 2 * kvo, cat=True, prologue=True, wide_n=True)
+    mm("wo+residual", qo, d_model, residual=True)
+    if gated:
+        mm("gate|up", d_model, d_ff, n_weights=2, cat=True,
+           prologue=True, wide_n=True)
+    else:
+        mm("mlp1", d_model, d_ff, prologue=True, wide_n=True)
+    mm("mlp2+residual", d_ff, d_model, residual=True)
+    return {"ops": rows, "total": sum(t for _, t, _ in rows),
+            "weight_bytes": weight_total}
+
+
+def decode_weight_traffic_cfg(cfg, *, n_slots: int, dtype_bytes: int = 2,
+                              prefused: bool = True) -> dict:
+    """:func:`decode_weight_traffic` with dims pulled from a ModelConfig."""
+    return decode_weight_traffic(
+        n_slots=n_slots, d_model=cfg.d_model, n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim, d_ff=cfg.d_ff,
+        gated=cfg.act in GATED_ACTS, dtype_bytes=dtype_bytes,
+        prefused=prefused)
 
 
 # ----------------------------------------------------------------------

@@ -31,7 +31,15 @@ DEFAULT_RULES = {
     "vocab_act": "model",   # activation vocab dim (logits)
     "embed": ("data", "model"),  # parameter d_model dim (FSDP)
     "vocab": "model",
-    "qkv": None,            # fused q/kv output dims of projections
+    # Fused sibling-projection panel dims (PR 4): 'qkv' names the N axis
+    # of the stored wqkv / wkv leaves (q|k|v column panels concatenated
+    # at init), 'ffn' the wgi gate|up panel. Any mesh axis assigned here
+    # must divide EVERY segment of the fused panel (q, k, v / gate, up),
+    # not just the total width — otherwise a shard boundary would fall
+    # inside one projection and decode's output slicing would cross
+    # shards. The baseline schedule keeps both replicated (FSDP shards
+    # the K axis via 'embed' instead).
+    "qkv": None,
     "ffn": None,
     "experts": "model",     # expert-parallel stacked expert dim
     "heads": "model",       # activation heads dim

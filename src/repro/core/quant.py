@@ -41,7 +41,13 @@ def dequantize(acc_i32: jnp.ndarray, x_scale: jnp.ndarray,
 
 def quantize_tree(params, predicate=None):
     """Weight-only quantize every >=2D leaf of a param tree. Returns a
-    tree of (int8, scale) pairs for matmul weights, passthrough others."""
+    tree of (int8, scale) pairs for matmul weights, passthrough others.
+
+    Scales are per output channel, so quantizing a *fused* projection
+    leaf (wq|wk|wv or wg|wi stored pre-concatenated, PR 4) yields
+    exactly the concatenation of the per-part scales: the int8 panel
+    and its scales arrive pre-fused, no per-call scale concat needed.
+    """
     import jax
 
     def q(path, leaf):
@@ -51,3 +57,34 @@ def quantize_tree(params, predicate=None):
         return leaf
 
     return jax.tree_util.tree_map_with_path(q, params)
+
+
+LM_WEIGHT_KEYS = frozenset({
+    "embed", "lm_head", "wqkv", "wkv", "wq", "wk", "wv", "wgi", "wg",
+    "wi", "wo"})
+
+
+def lm_weight_predicate(path, leaf) -> bool:
+    """Predicate for :func:`quantize_tree` on LM trees: quantize only
+    the matmul projection / embedding leaves. Scan-stacked norm gains
+    are (R, d) and pass the >=2D check, but they are not weight
+    matrices — quantizing them breaks both accuracy and the stacked
+    leading axis (their scales would collapse it to 1)."""
+    key = getattr(path[-1], "key", None)
+    return key in LM_WEIGHT_KEYS
+
+
+def is_quantized(leaf) -> bool:
+    """True for a weight-only int8 leaf produced by :func:`quantize_tree`."""
+    return isinstance(leaf, dict) and "q" in leaf and "s" in leaf
+
+
+def resolve_weight(w, dtype=None):
+    """Materialize a weight leaf for an fp matmul: arrays pass through;
+    weight-only int8 ``{"q", "s"}`` leaves dequantize to ``dtype`` (the
+    serving engine's weight-only path — exact, the scales are the ones
+    the quantizer chose)."""
+    if is_quantized(w):
+        out = w["q"].astype(jnp.float32) * w["s"]
+        return out.astype(dtype) if dtype is not None else out
+    return w

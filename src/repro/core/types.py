@@ -12,6 +12,13 @@ import dataclasses
 from typing import Optional, Tuple
 
 
+# Activations whose MLP is the gated two-matmul front half (SwiGLU /
+# GeGLU): the model layer stores wg|wi as one fused ``wgi`` leaf and the
+# traffic model prices the dual-weight kernel. Single source of truth —
+# models/mlp.py and core/block_traffic.py both branch on it.
+GATED_ACTS = ("silu", "geglu")
+
+
 @dataclasses.dataclass(frozen=True)
 class MoEConfig:
     """Mixture-of-experts FFN configuration (token-choice routing)."""
@@ -191,7 +198,7 @@ class ModelConfig:
             return d * q_out + 2 * d * kv_out + q_out * d
 
         def mlp_params(d_ff):
-            n_mats = 3 if self.act in ("silu", "geglu") else 2
+            n_mats = 3 if self.act in GATED_ACTS else 2
             return n_mats * d * d_ff
 
         total = active = 0

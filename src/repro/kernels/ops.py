@@ -12,12 +12,22 @@ ops of a transformer sublayer (DESIGN.md §3):
 
   * ``matmul(norm=...)``        — pre-norm runs as the kernel prologue;
   * ``matmul(residual=...)``    — the residual add rides the epilogue;
-  * :func:`qkv_proj`            — wq|wk|wv concatenated along N so one
-                                  activation row panel feeds all heads'
-                                  projections (column weight sharing);
-  * :func:`gate_up_proj`        — gate and up weights stream through
-                                  one kernel whose epilogue computes
+  * :func:`qkv_proj`            — wq|wk|wv as ONE stored weight panel so
+                                  one activation row fetch feeds all
+                                  heads' projections (column weight
+                                  sharing); outputs are sliced per
+                                  projection;
+  * :func:`gate_up_proj`        — the wg|wi panel streams through one
+                                  kernel whose epilogue computes
                                   ``act(g) * h`` (SwiGLU/GeGLU).
+
+PR 4 moves the fused panels into the *param tree* (DESIGN.md §5): the
+multi-projection ops take a pre-concatenated weight leaf and slice
+outputs, so no per-call ``jnp.concatenate`` ever materializes a
+weight-sized buffer — the write that dominated decode, where M is a
+handful of serving slots but the panel is the full weight matrix.
+Weight leaves may also be weight-only int8 ``{"q", "s"}`` dicts
+(``core.quant.quantize_tree``); they are dequantized on the fly.
 """
 from __future__ import annotations
 
@@ -25,7 +35,7 @@ from typing import NamedTuple, Optional, Sequence
 
 import jax.numpy as jnp
 
-from repro.core import runtime
+from repro.core import quant, runtime
 from repro.core.rowwise import plan_matmul
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_p
@@ -81,6 +91,7 @@ def matmul(x: jnp.ndarray, w: jnp.ndarray, *,
     whenever a norm prologue rides along.
     """
     impl = impl or runtime.resolve_impl()
+    w = quant.resolve_weight(w, x.dtype)
     x2, lead = _flatten_leading(x)
     n = w.shape[1]
     res2 = None if residual is None else residual.reshape(-1, n)
@@ -113,29 +124,26 @@ def matmul(x: jnp.ndarray, w: jnp.ndarray, *,
     return out.reshape(*lead, n)
 
 
-def qkv_proj(x: jnp.ndarray, ws: Sequence[jnp.ndarray], *,
-             biases: Optional[Sequence[Optional[jnp.ndarray]]] = None,
+def qkv_proj(x: jnp.ndarray, w: jnp.ndarray, splits: Sequence[int], *,
+             bias: Optional[jnp.ndarray] = None,
              norm: Optional[NormSpec] = None,
              impl: Optional[str] = None):
-    """Multi-output wide-N projection: [w0 | w1 | ...] along N, one
-    kernel launch, one activation-row fetch for every projection — the
-    paper's column weight sharing lifted to the q/k/v (or any sibling
-    projection) level. Returns one output per weight.
+    """Multi-output wide-N projection over a PRE-FUSED weight panel:
+    ``w`` is the stored [wq | wk | wv] (or any sibling-projection) leaf
+    of shape (K, sum(splits)) — one kernel launch, one activation-row
+    fetch for every projection (the paper's column weight sharing
+    lifted to the sublayer level), and because the panel lives fused in
+    the param tree (DESIGN.md §5) there is no per-call concatenate: the
+    only weight traffic is the kernel's own panel stream. Outputs are
+    sliced per projection (cheap: M x split activations).
 
-    NB: the concat happens per call, so XLA materializes the wide
-    weight each forward — a weight-sized HBM write that matters when M
-    is small (decode). Storing the projections pre-concatenated in the
-    param tree (as the Swin params already do) removes it; that
-    param-layout migration is tracked as a follow-up in DESIGN.md §3.
+    ``bias``: optional pre-fused (sum(splits),) bias. ``w`` may be a
+    weight-only int8 ``{"q", "s"}`` leaf (dequantized on the fly).
+    Returns one output per entry of ``splits``.
     """
-    splits = [w.shape[1] for w in ws]
-    w_cat = jnp.concatenate(list(ws), axis=1)
-    b_cat = None
-    if biases is not None and any(b is not None for b in biases):
-        b_cat = jnp.concatenate(
-            [jnp.zeros((w.shape[1],), x.dtype) if b is None else b
-             for w, b in zip(ws, biases)])
-    out = matmul(x, w_cat, bias=b_cat, norm=norm, wide_n=True, impl=impl)
+    w = quant.resolve_weight(w, x.dtype)
+    assert sum(splits) == w.shape[-1], (splits, w.shape)
+    out = matmul(x, w, bias=bias, norm=norm, wide_n=True, impl=impl)
     outs, off = [], 0
     for s in splits:
         outs.append(out[..., off:off + s])
@@ -143,19 +151,28 @@ def qkv_proj(x: jnp.ndarray, ws: Sequence[jnp.ndarray], *,
     return tuple(outs)
 
 
-def gate_up_proj(x: jnp.ndarray, w_gate: jnp.ndarray, w_in: jnp.ndarray, *,
-                 activation: str,
-                 bias_gate: Optional[jnp.ndarray] = None,
-                 bias_in: Optional[jnp.ndarray] = None,
+def gate_up_proj(x: jnp.ndarray, w: jnp.ndarray, *, activation: str,
+                 bias: Optional[jnp.ndarray] = None,
                  norm: Optional[NormSpec] = None,
                  impl: Optional[str] = None) -> jnp.ndarray:
-    """Gated FFN front half as ONE kernel: ``act(x@w_gate) * (x@w_in)``
-    with optional fused pre-norm — SwiGLU/GeGLU in a single launch
-    (two matmuls + gating multiply; four launches on the seed path).
+    """Gated FFN front half as ONE kernel: ``act(x@wg) * (x@wi)`` with
+    optional fused pre-norm — SwiGLU/GeGLU in a single launch.
+
+    ``w`` is the pre-fused [wg | wi] leaf of shape (K, 2F) (DESIGN.md
+    §5); the kernel streams the two halves as its dual weight operands
+    — both are reads of the stored panel, no per-call concatenate or
+    weight-sized copy is written. ``bias``: optional pre-fused (2F,)
+    bias. ``w`` may be a weight-only int8 ``{"q", "s"}`` leaf.
     """
     impl = impl or runtime.resolve_impl()
+    w = quant.resolve_weight(w, x.dtype)
+    f = w.shape[-1] // 2
+    assert w.shape[-1] == 2 * f, w.shape
+    w_gate, w_in = w[..., :f], w[..., f:]
+    bias_gate = bias_in = None
+    if bias is not None:
+        bias_gate, bias_in = bias[..., :f], bias[..., f:]
     x2, lead = _flatten_leading(x)
-    n = w_in.shape[1]
     if impl == "ref":
         out = ref.pipeline_ref(
             x2, w_in, bias=bias_in, activation=activation, w_gate=w_gate,
@@ -164,10 +181,10 @@ def gate_up_proj(x: jnp.ndarray, w_gate: jnp.ndarray, w_in: jnp.ndarray, *,
             gamma=norm.gamma if norm else None,
             beta=norm.beta if norm else None,
             eps=norm.eps if norm else 1e-6)
-        return out.reshape(*lead, n)
+        return out.reshape(*lead, f)
 
     interpret = impl == "interpret"
-    x2, norm, plan = _plan_norm_fallback(x2, norm, interpret, n,
+    x2, norm, plan = _plan_norm_fallback(x2, norm, interpret, f,
                                          n_weights=2, wide_n=True)
     out = rowwise_matmul_p(
         x2, w_in, bias=bias_in, activation=activation, w_gate=w_gate,
@@ -177,7 +194,7 @@ def gate_up_proj(x: jnp.ndarray, w_gate: jnp.ndarray, w_in: jnp.ndarray, *,
         pbeta=norm.beta if norm else None,
         eps=norm.eps if norm else 1e-6,
         plan=plan, interpret=interpret)
-    return out.reshape(*lead, n)
+    return out.reshape(*lead, f)
 
 
 def matmul_int8(xq, wq, x_scale, w_scale, *, bias=None, activation=None,

@@ -31,9 +31,26 @@ from repro.models import rope as rope_lib
 DENSE_MAX_SEQ = 2048      # above this, 'ref' impl switches to chunked
 
 
+def proj_splits(cfg: ModelConfig):
+    """(q, k, v) output widths inside the fused ``wqkv`` panel."""
+    qo = cfg.n_heads * cfg.head_dim
+    kvo = cfg.n_kv_heads * cfg.head_dim
+    return (qo, kvo, kvo)
+
+
 def init(key, cfg: ModelConfig, stack: Optional[int], dtype,
          cross: bool = False):
-    """Returns (params, logical_specs). stack=None => unstacked (shared)."""
+    """Returns (params, logical_specs). stack=None => unstacked (shared).
+
+    Projection weights are stored PRE-FUSED (DESIGN.md §5): self
+    attention keeps one ``wqkv`` (d, (Hq + 2*Hkv) * hd) leaf — q, k and
+    v column panels concatenated at init time, so the serving hot path
+    never pays a per-call weight concatenate. Cross attention (whisper)
+    projects q from the decoder stream but k/v from the encoder output,
+    so it keeps ``wq`` separate and fuses the encoder-side pair into
+    one ``wkv`` (d, 2*Hkv*hd) leaf. ``lm.unfuse_params`` recovers the
+    seed's split layout (checkpoint migration).
+    """
     d, hd = cfg.d_model, cfg.head_dim
     qo, kvo = cfg.n_heads * hd, cfg.n_kv_heads * hd
     lead = () if stack is None else (stack,)
@@ -45,10 +62,16 @@ def init(key, cfg: ModelConfig, stack: Optional[int], dtype,
         return (jax.random.normal(k, lead + (din, dout), jnp.float32)
                 * std).astype(dtype)
 
-    params = {"wq": w(ks[0], d, qo), "wk": w(ks[1], d, kvo),
-              "wv": w(ks[2], d, kvo), "wo": w(ks[3], qo, d)}
-    specs = {"wq": llead + ("embed", "qkv"), "wk": llead + ("embed", "qkv"),
-             "wv": llead + ("embed", "qkv"), "wo": llead + ("qkv", "embed")}
+    if cross:
+        params = {"wq": w(ks[0], d, qo), "wkv": w(ks[1], d, 2 * kvo),
+                  "wo": w(ks[3], qo, d)}
+        specs = {"wq": llead + ("embed", "qkv"),
+                 "wkv": llead + ("embed", "qkv"),
+                 "wo": llead + ("qkv", "embed")}
+    else:
+        params = {"wqkv": w(ks[0], d, qo + 2 * kvo), "wo": w(ks[3], qo, d)}
+        specs = {"wqkv": llead + ("embed", "qkv"),
+                 "wo": llead + ("qkv", "embed")}
     return params, specs
 
 
@@ -355,33 +378,43 @@ def apply(params, x, *, cfg: ModelConfig, positions, window: int = 0,
           norm: Optional[ops.NormSpec] = None, residual=None):
     """Full-sequence forward (train / prefill).
 
-    kv: optional (k_states, v_states) override for cross-attention.
+    kv: optional (enc_out, enc_out) override for cross-attention — k
+    and v must project from the SAME encoder stream (fused wkv panel).
     norm: fused-pipeline mode — x arrives *un-normalized* and the
-    pre-norm runs as the qkv kernel's prologue, with wq|wk|wv
-    concatenated along N (one activation fetch for all projections).
-    residual: folded into the output projection's epilogue.
+    pre-norm runs as the qkv kernel's prologue over the stored wq|wk|wv
+    panel (one activation fetch for all projections, no per-call
+    weight concat). residual: folded into the output projection's
+    epilogue.
     Returns (out, (k_heads, v_heads)) — the heads are cached by prefill.
     """
     b, s, d = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     if kv is None:
-        if norm is not None:
-            q, k, v = ops.qkv_proj(
-                x, (params["wq"], params["wk"], params["wv"]), norm=norm)
-        else:
-            q = ops.matmul(x, params["wq"])
-            k = ops.matmul(x, params["wk"])
-            v = ops.matmul(x, params["wv"])
+        q, k, v = _project_qkv(params, x, cfg, norm)
         q = q.reshape(b, s, hq, hd)
         k = k.reshape(b, s, hkv, hd)
         v = v.reshape(b, s, hkv, hd)
         q, k = _apply_rope(q, k, cfg, positions)
     else:
         xk, xv = kv
+        assert xk is xv, (
+            "cross-attention projects k AND v from one encoder stream "
+            "through the fused wkv panel; distinct k/v sources are not "
+            "supported")
         sk = xk.shape[1]
+        kvo = hkv * hd
         q = ops.matmul(x, params["wq"], norm=norm).reshape(b, s, hq, hd)
-        k = ops.matmul(xk, params["wk"]).reshape(b, sk, hkv, hd)
-        v = ops.matmul(xv, params["wv"]).reshape(b, sk, hkv, hd)
+        if runtime.pipeline_fusion():
+            k, v = ops.qkv_proj(xk, params["wkv"], (kvo, kvo))
+        else:
+            # seed per-op baseline: the stored panel sliced back into
+            # the two projection launches (as _project_qkv does)
+            from repro.core import quant
+            wkv = quant.resolve_weight(params["wkv"], xk.dtype)
+            k = ops.matmul(xk, wkv[..., :kvo])
+            v = ops.matmul(xk, wkv[..., kvo:])
+        k = k.reshape(b, sk, hkv, hd)
+        v = v.reshape(b, sk, hkv, hd)
     qh = q.transpose(0, 2, 1, 3)
     kh = k.transpose(0, 2, 1, 3)
     vh = v.transpose(0, 2, 1, 3)
@@ -407,18 +440,33 @@ def write_cache(cache: KVCache, k_new, v_new, pos, window: int = 0):
     return KVCache(k=upd(cache.k, k_new), v=upd(cache.v, v_new))
 
 
+def _project_qkv(params, x, cfg: ModelConfig, norm):
+    """q/k/v projections from the stored fused ``wqkv`` panel.
+
+    Fused mode (a norm spec rides along): one wide-N kernel launch over
+    the pre-concatenated leaf, outputs sliced per projection — no
+    per-call weight concatenate anywhere (DESIGN.md §5). Per-op mode
+    (norm is None — the seed baseline kept for before/after benches):
+    the stored panel is sliced back into the three projection weights
+    and each runs as its own launch.
+    """
+    splits = proj_splits(cfg)
+    if norm is not None:
+        return ops.qkv_proj(x, params["wqkv"], splits, norm=norm)
+    from repro.core import quant
+    w = quant.resolve_weight(params["wqkv"], x.dtype)
+    qo, kvo, _ = splits
+    return (ops.matmul(x, w[..., :qo]),
+            ops.matmul(x, w[..., qo:qo + kvo]),
+            ops.matmul(x, w[..., qo + kvo:]))
+
+
 def _decode_qkv(params, x, cfg: ModelConfig, lengths, norm):
     """Shared decode-step projections: q/k/v heads for the new token,
     RoPE'd at the token's position. x: (B, 1, d)."""
     b = x.shape[0]
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    if norm is not None:
-        q, k, v = ops.qkv_proj(
-            x, (params["wq"], params["wk"], params["wv"]), norm=norm)
-    else:
-        q = ops.matmul(x, params["wq"])
-        k = ops.matmul(x, params["wk"])
-        v = ops.matmul(x, params["wv"])
+    q, k, v = _project_qkv(params, x, cfg, norm)
     q = q.reshape(b, 1, hq, hd)
     k = k.reshape(b, 1, hkv, hd)
     v = v.reshape(b, 1, hkv, hd)

@@ -15,7 +15,9 @@ from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import quant
 from repro.core.partitioning import logical_constraint
 from repro.core.types import ModelConfig, Stage
 from repro.kernels import ops
@@ -90,6 +92,117 @@ def init_lm(key, cfg: ModelConfig, dtype=None):
 
 
 # ----------------------------------------------------------------------
+# Param-layout migration: fused (wqkv / wgi) <-> seed (wq/wk/wv, wg/wi)
+# ----------------------------------------------------------------------
+
+
+def _cat_leaves(leaves):
+    """Concatenate sibling projection leaves along the output axis.
+    Weight-only int8 leaves fuse exactly: per-output-channel scales are
+    per-column, so the fused panel's scales ARE the concatenated parts'
+    scales (see quant.quantize_tree)."""
+    if quant.is_quantized(leaves[0]):
+        return {"q": jnp.concatenate([l["q"] for l in leaves], axis=-1),
+                "s": jnp.concatenate([l["s"] for l in leaves], axis=-1)}
+    return jnp.concatenate(leaves, axis=-1)
+
+
+def _split_leaf(leaf, widths):
+    """Inverse of :func:`_cat_leaves`."""
+    cuts = list(np.cumsum(widths)[:-1])
+    if quant.is_quantized(leaf):
+        qs = jnp.split(leaf["q"], cuts, axis=-1)
+        ss = jnp.split(leaf["s"], cuts, axis=-1)
+        return [{"q": q, "s": s} for q, s in zip(qs, ss)]
+    return jnp.split(leaf, cuts, axis=-1)
+
+
+def _migrate_blocks(cfg: ModelConfig, params, block_fn):
+    """Apply ``block_fn(blk, block_params) -> block_params`` to every
+    block's param dict (stacked and shared groups, decoder and encoder
+    stages); returns a new tree, every other leaf untouched."""
+    def stage_list(stages_cfg, stages_p):
+        new = []
+        for stage, sp in zip(stages_cfg, stages_p):
+            ns = {"stacked": dict(sp["stacked"]),
+                  "shared": dict(sp["shared"])}
+            for i, blk in enumerate(stage.body):
+                key = str(i)
+                group = "shared" if blk.shared else "stacked"
+                if key in ns[group]:
+                    ns[group][key] = block_fn(blk, ns[group][key])
+            new.append(ns)
+        return new
+
+    out = dict(params)
+    out["stages"] = stage_list(cfg.stages(), params["stages"])
+    if cfg.encdec and "enc" in params:
+        enc = dict(params["enc"])
+        enc["stages"] = stage_list(cfg.enc_stages(),
+                                   params["enc"]["stages"])
+        out["enc"] = enc
+    return out
+
+
+def fuse_params(cfg: ModelConfig, params):
+    """Migrate a seed-layout param tree (split wq/wk/wv, wg/wi leaves —
+    PRs 0–3, old checkpoints) to the fused layout ``init_lm`` now
+    produces: one ``wqkv`` leaf per self-attention layer, one ``wkv``
+    per cross-attention layer, one ``wgi`` per gated MLP. Idempotent;
+    exact (pure concatenation, also for weight-only int8 leaves and for
+    per-leaf optimizer moments — see ``train.step.fuse_state``)."""
+    def block_fn(blk, p):
+        p = dict(p)
+        if blk.mixer == "attn" and "attn" in p and "wq" in p["attn"]:
+            a = dict(p["attn"])
+            a["wqkv"] = _cat_leaves([a.pop("wq"), a.pop("wk"),
+                                     a.pop("wv")])
+            p["attn"] = a
+        if blk.cross_attn and "cross" in p and "wk" in p["cross"]:
+            c = dict(p["cross"])
+            c["wkv"] = _cat_leaves([c.pop("wk"), c.pop("wv")])
+            p["cross"] = c
+        if (blk.ffn == "mlp" and "ffn" in p and "wg" in p["ffn"]
+                and "wi" in p["ffn"]):
+            f = dict(p["ffn"])
+            f["wgi"] = _cat_leaves([f.pop("wg"), f.pop("wi")])
+            p["ffn"] = f
+        return p
+
+    return _migrate_blocks(cfg, params, block_fn)
+
+
+def unfuse_params(cfg: ModelConfig, params):
+    """Inverse of :func:`fuse_params`: recover the seed's split layout
+    (e.g. to restore INTO an old checkpoint's tree structure, or to
+    export one). ``fuse_params(cfg, unfuse_params(cfg, p))`` is the
+    identity."""
+    qo, kvo, _ = attention.proj_splits(cfg)
+
+    def block_fn(blk, p):
+        p = dict(p)
+        if blk.mixer == "attn" and "attn" in p and "wqkv" in p["attn"]:
+            a = dict(p["attn"])
+            a["wq"], a["wk"], a["wv"] = _split_leaf(a.pop("wqkv"),
+                                                    (qo, kvo, kvo))
+            p["attn"] = a
+        if blk.cross_attn and "cross" in p and "wkv" in p["cross"]:
+            c = dict(p["cross"])
+            c["wk"], c["wv"] = _split_leaf(c.pop("wkv"), (kvo, kvo))
+            p["cross"] = c
+        if blk.ffn == "mlp" and "ffn" in p and "wgi" in p["ffn"]:
+            f = dict(p["ffn"])
+            wgi = f.pop("wgi")
+            half = (wgi["q"] if quant.is_quantized(wgi)
+                    else wgi).shape[-1] // 2
+            f["wg"], f["wi"] = _split_leaf(wgi, (half, half))
+            p["ffn"] = f
+        return p
+
+    return _migrate_blocks(cfg, params, block_fn)
+
+
+# ----------------------------------------------------------------------
 # Stage execution
 # ----------------------------------------------------------------------
 
@@ -147,7 +260,14 @@ def _run_stages(stage_params, stages, x, *, cache=None, **kw):
 
 
 def embed(params, tokens, cfg: ModelConfig, extra: Optional[dict] = None):
-    x = jnp.take(params["embed"], tokens, axis=0)
+    w = params["embed"]
+    if quant.is_quantized(w):
+        # weight-only int8 tree: gather int8 rows, then dequantize only
+        # the gathered (B, S, d) block by the per-column scales
+        x = (jnp.take(w["q"], tokens, axis=0).astype(jnp.float32)
+             * w["s"]).astype(jnp.dtype(cfg.dtype))
+    else:
+        x = jnp.take(w, tokens, axis=0)
     if cfg.frontend == "vision" and extra and "vis_embeds" in extra:
         ve = extra["vis_embeds"].astype(x.dtype)
         x = jax.lax.dynamic_update_slice(x, ve, (0, 0, 0))
@@ -158,7 +278,7 @@ def unembed(params, x, cfg: ModelConfig):
     x = ops.layernorm(x, params["final_norm"]["g"],
                       params["final_norm"].get("b"), kind=cfg.norm)
     if cfg.tie_embeddings:
-        w = params["embed"].T
+        w = quant.resolve_weight(params["embed"], x.dtype).T
     else:
         w = params["lm_head"]
     logits = ops.matmul(x, w, out_dtype=jnp.float32)

@@ -11,14 +11,16 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import ModelConfig
+from repro.core.types import GATED_ACTS as GATED, ModelConfig
 from repro.kernels import ops
-
-GATED = ("silu", "geglu")
 
 
 def init(key, cfg: ModelConfig, stack: Optional[int], dtype,
          d_ff: Optional[int] = None):
+    """Gated variants store the gate|up pair PRE-FUSED as one ``wgi``
+    (d, 2*d_ff) leaf (DESIGN.md §5) — gate columns first, up columns
+    second — so the gated kernel streams both halves straight from the
+    stored panel. Non-gated MLPs keep the single ``wi`` leaf."""
     d = cfg.d_model
     f = d_ff or cfg.d_ff
     lead = () if stack is None else (stack,)
@@ -29,29 +31,36 @@ def init(key, cfg: ModelConfig, stack: Optional[int], dtype,
         return (jax.random.normal(k, lead + (din, dout), jnp.float32)
                 / math.sqrt(din)).astype(dtype)
 
-    params = {"wi": w(ks[0], d, f), "wo": w(ks[1], f, d)}
-    specs = {"wi": llead + ("embed", "ffn"), "wo": llead + ("ffn", "embed")}
     if cfg.act in GATED:
-        params["wg"] = w(ks[2], d, f)
-        specs["wg"] = llead + ("embed", "ffn")
+        params = {"wgi": w(ks[0], d, 2 * f), "wo": w(ks[1], f, d)}
+        specs = {"wgi": llead + ("embed", "ffn"),
+                 "wo": llead + ("ffn", "embed")}
+    else:
+        params = {"wi": w(ks[0], d, f), "wo": w(ks[1], f, d)}
+        specs = {"wi": llead + ("embed", "ffn"),
+                 "wo": llead + ("ffn", "embed")}
     return params, specs
 
 
 def apply(params, x, *, cfg: ModelConfig, norm=None, residual=None):
     """``norm``/``residual`` select the fused pipeline (DESIGN.md §3):
     the pre-norm runs as the first kernel's prologue, gated variants
-    stream wg and wi through ONE kernel whose epilogue computes
-    ``act(g) * h``, and the residual add rides the output projection's
-    epilogue. With both None this is the seed's per-op composition."""
+    stream the stored wg|wi panel through ONE kernel whose epilogue
+    computes ``act(g) * h``, and the residual add rides the output
+    projection's epilogue. With both None this is the seed's per-op
+    composition (the stored panel sliced back into wg and wi)."""
     act = {"silu": "silu", "geglu": "gelu", "gelu": "gelu",
            "relu": "relu"}[cfg.act]
     if cfg.act in GATED:
         if norm is not None:
-            h = ops.gate_up_proj(x, params["wg"], params["wi"],
-                                 activation=act, norm=norm)
+            h = ops.gate_up_proj(x, params["wgi"], activation=act,
+                                 norm=norm)
         else:
-            g = ops.matmul(x, params["wg"], activation=act)
-            h = ops.matmul(x, params["wi"]) * g
+            from repro.core import quant
+            wgi = quant.resolve_weight(params["wgi"], x.dtype)
+            f = wgi.shape[-1] // 2
+            g = ops.matmul(x, wgi[..., :f], activation=act)
+            h = ops.matmul(x, wgi[..., f:]) * g
     else:
         h = ops.matmul(x, params["wi"], activation=act, norm=norm)
     return ops.matmul(h, params["wo"], residual=residual)

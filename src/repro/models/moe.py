@@ -30,6 +30,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import partitioning
 from repro.core import compat
+from repro.core import quant
 from repro.core.types import ModelConfig
 from repro.kernels import ops
 
@@ -230,6 +231,12 @@ def _apply_ep(params, x, *, cfg: ModelConfig, mesh):
 
 def apply(params, x, *, cfg: ModelConfig):
     """x: (B, S, d) -> (out, aux_loss)."""
+    # Weight-only int8 trees: the expert einsums consume the (E, d, f)
+    # leaves directly (no ops.matmul in between), so dequantize here.
+    if any(quant.is_quantized(params[k]) for k in ("wi", "wg", "wo")):
+        params = dict(params)
+        for k in ("wi", "wg", "wo"):
+            params[k] = quant.resolve_weight(params[k])
     mesh = partitioning.active_mesh()
     e = padded_experts(cfg)
     if mesh is not None and "model" in mesh.axis_names:

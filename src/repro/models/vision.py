@@ -164,10 +164,11 @@ def _swin_block_fused(blk, x, heads, w, shift, rel_idx, mask):
     xr = jnp.roll(x, (-shift, -shift), axis=(1, 2)) if shift else x
     xw = _window_partition(xr, w)                  # (B*nW, t, C)
     nw, t, _ = xw.shape
-    qkv = ops.matmul(xw, blk["qkv"], bias=blk["qkv_b"],
-                     norm=ops.NormSpec("layer", blk["ln1_g"],
-                                       blk["ln1_b"]))
-    q, k, v = jnp.split(qkv, 3, axis=-1)
+    # Swin stores qkv pre-fused since the seed — the LM params adopted
+    # the same layout in PR 4, and both now route through ops.qkv_proj.
+    q, k, v = ops.qkv_proj(xw, blk["qkv"], (c, c, c), bias=blk["qkv_b"],
+                           norm=ops.NormSpec("layer", blk["ln1_g"],
+                                             blk["ln1_b"]))
 
     def heads_of(z):
         return z.reshape(nw, t, heads, hd).transpose(0, 2, 1, 3)

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import quant
 from repro.core.types import ModelConfig, PagingConfig
 from repro.models import lm
 from repro.serve import sampling
@@ -59,7 +60,8 @@ class Engine:
                  max_len: int = 512, eos_id: int = 1,
                  temperature: float = 0.0, seed: int = 0,
                  paging: PagingConfig = PagingConfig(),
-                 buckets: Optional[List[int]] = None):
+                 buckets: Optional[List[int]] = None,
+                 cache_dtype=None):
         self.params, self.cfg = params, cfg
         self.n_slots, self.max_len, self.eos_id = n_slots, max_len, eos_id
         self.temperature = temperature
@@ -70,7 +72,17 @@ class Engine:
         self.max_pages = -(-max_len // ps)
         n_pages = paging.n_pages or n_slots * self.max_pages
         self.pool = PagePool(n_pages, ps, n_slots, self.max_pages)
-        dtype = jnp.result_type(params["embed"])
+        # KV-cache dtype: explicit override > the embed leaf's dtype >
+        # cfg.dtype. A weight-only int8 tree (quant.quantize_tree) stores
+        # the embed leaf as a {"q","s"} dict, which jnp.result_type used
+        # to crash on — quantized trees fall back to the config dtype.
+        if cache_dtype is not None:
+            dtype = jnp.dtype(cache_dtype)
+        elif quant.is_quantized(params["embed"]):
+            dtype = jnp.dtype(cfg.dtype)
+        else:
+            dtype = jnp.result_type(params["embed"])
+        self.cache_dtype = dtype
         self.cache = lm.init_paged_cache(cfg, n_slots, max_len,
                                          page_size=ps, n_pages=n_pages,
                                          dtype=dtype)
@@ -136,12 +148,17 @@ class Engine:
 
     def submit(self, req: Request):
         plen = int(req.prompt.shape[0])
-        if not 0 < plen < self.max_len:
+        if not 0 < plen <= self.max_len:
             raise ValueError(f"prompt of length {plen} cannot decode "
                              f"within max_len={self.max_len}")
         if req.max_new < 1:
             raise ValueError(f"max_new must be >= 1, got {req.max_new} "
                              "(every request produces the prefill token)")
+        if plen == self.max_len and req.max_new > 1:
+            # prefill-only request: admission writes exactly max_len KV
+            # rows and the prefill-sampled token retires it — there is
+            # no in-bounds cache row left for a decode step to write
+            req = dataclasses.replace(req, max_new=1)
         self.queue.append((req, time.perf_counter()))
 
     def compile_counts(self) -> dict:

@@ -34,8 +34,12 @@ def sample(logits: jnp.ndarray, key, *, temperature=1.0,
         raw = logits
         logits = logits / jnp.maximum(t, 1e-6)[:, None]
     if top_k > 0:
-        kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
-        logits = jnp.where(logits < kth, -jnp.inf, logits)
+        # clamp to the vocab size: top_k >= V keeps every token (the
+        # unclamped static index -top_k was out of bounds and raised)
+        k = min(int(top_k), logits.shape[-1])
+        if k < logits.shape[-1]:
+            kth = jnp.sort(logits, axis=-1)[:, -k][:, None]
+            logits = jnp.where(logits < kth, -jnp.inf, logits)
     if top_p < 1.0:
         sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
         probs = jax.nn.softmax(sorted_logits, axis=-1)

@@ -45,6 +45,22 @@ def state_logical_specs(param_specs, tcfg: TrainConfig):
                       residual=res)
 
 
+def fuse_state(state: TrainState, cfg: ModelConfig) -> TrainState:
+    """Migrate a seed-layout TrainState (split wq/wk/wv, wg/wi leaves)
+    to the fused param layout (DESIGN.md §5), so old training
+    checkpoints keep resuming. AdamW moments are per-element, so
+    concatenating mu/nu alongside the params is EXACT — the migrated
+    state steps bit-identically to the unmigrated one (global-norm
+    clipping sums over leaves, invariant under the re-grouping). EF
+    residuals (cross-pod compression) mirror the grad tree and fuse the
+    same way."""
+    from repro.models import lm
+    fuse = lambda tree: lm.fuse_params(cfg, tree)   # noqa: E731
+    opt = state.opt._replace(mu=fuse(state.opt.mu), nu=fuse(state.opt.nu))
+    res = fuse(state.residual) if state.residual else state.residual
+    return TrainState(params=fuse(state.params), opt=opt, residual=res)
+
+
 def _grads_and_metrics(params, batch, cfg, tcfg):
     def loss_fn(p, b):
         return lm.loss_fn(p, b, cfg, remat=tcfg.remat)

@@ -45,16 +45,19 @@ def _close(got, want, dtype):
 @pytest.mark.parametrize("dtype", DTYPES)
 @pytest.mark.parametrize("kind", ["rms", "layer"])
 def test_qkv_proj_prologue_parity(rng, dtype, kind):
-    """[norm-prologue + wq|wk|wv wide-N] vs norm -> three matmuls."""
+    """[norm-prologue + stored wq|wk|wv panel] vs norm -> three matmuls."""
     d = 96
     x = _rand(rng, (2, 19, d), dtype)
     ws = [_rand(rng, (d, 64), dtype), _rand(rng, (d, 32), dtype),
           _rand(rng, (d, 32), dtype)]
-    bs = [_rand(rng, (64,)), None, _rand(rng, (32,))]
+    bs = [_rand(rng, (64,)), jnp.zeros((32,)), _rand(rng, (32,))]
+    w_fused = jnp.concatenate(ws, axis=-1)     # the stored param layout
+    b_fused = jnp.concatenate(bs)
     g = _rand(rng, (d,))
     b = _rand(rng, (d,)) if kind == "layer" else None
     norm = ops.NormSpec(kind, g, b)
-    q, k, v = ops.qkv_proj(x, ws, biases=bs, norm=norm, impl="interpret")
+    q, k, v = ops.qkv_proj(x, w_fused, (64, 32, 32), bias=b_fused,
+                           norm=norm, impl="interpret")
     xn = ref.layernorm_ref(x.reshape(-1, d), g, b, kind=kind)
     for got, w, bias in zip((q, k, v), ws, bs):
         want = ref.matmul_ref(xn, w, bias=bias).reshape(got.shape)
@@ -85,16 +88,19 @@ def test_qkv_proj_int8_wide_n(rng):
 @pytest.mark.parametrize("dtype", DTYPES)
 @pytest.mark.parametrize("with_bias", [False, True])
 def test_gate_up_proj_parity(rng, dtype, with_bias):
-    """One kernel for act(x@wg) * (x@wi) (+ fused pre-norm)."""
+    """One kernel for act(x@wg) * (x@wi) (+ fused pre-norm), streaming
+    the halves of the stored wg|wi panel."""
     d, f = 64, 96
     x = _rand(rng, (2, 13, d), dtype)
     wg, wi = _rand(rng, (d, f), dtype), _rand(rng, (d, f), dtype)
+    wgi = jnp.concatenate([wg, wi], axis=-1)   # the stored param layout
     bg = _rand(rng, (f,)) if with_bias else None
     bi = _rand(rng, (f,)) if with_bias else None
+    bias = jnp.concatenate([bg, bi]) if with_bias else None
     g = _rand(rng, (d,))
     norm = ops.NormSpec("rms", g)
-    got = ops.gate_up_proj(x, wg, wi, activation="silu", bias_gate=bg,
-                           bias_in=bi, norm=norm, impl="interpret")
+    got = ops.gate_up_proj(x, wgi, activation="silu", bias=bias,
+                           norm=norm, impl="interpret")
     want = ref.pipeline_ref(x.reshape(-1, d), wi, bias=bi, w_gate=wg,
                             bias_gate=bg, activation="silu",
                             norm_kind="rms", gamma=g).reshape(got.shape)

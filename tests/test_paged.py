@@ -327,18 +327,30 @@ def test_oversubscribed_pool_defers_and_completes():
 def test_max_new_one_and_submit_validation():
     """max_new=1 completes with exactly the prefill-sampled token (no
     stray decode step), and oversized prompts are rejected at submit
-    instead of wedging the run loop."""
+    instead of wedging the run loop. A prompt of exactly max_len is
+    serviceable (prefill-only: it writes exactly max_len KV rows and
+    retires at admission with the prefill-sampled token)."""
     cfg = REDUCED["deepseek-7b"]()
     key = jax.random.PRNGKey(5)
     params, _ = lm.init_lm(key, cfg, dtype=jnp.float32)
     eng = Engine(params, cfg, n_slots=2, max_len=32, eos_id=-1)
     with pytest.raises(ValueError):
-        eng.submit(Request(rid=9, prompt=jnp.zeros((32,), jnp.int32)))
+        eng.submit(Request(rid=9, prompt=jnp.zeros((33,), jnp.int32)))
     with pytest.raises(ValueError):
         eng.submit(Request(rid=9, prompt=jnp.zeros((0,), jnp.int32)))
     with pytest.raises(ValueError):
         eng.submit(Request(rid=9, prompt=jnp.zeros((4,), jnp.int32),
                            max_new=0))
+    # plen == max_len: accepted, effective max_new clamped to 1
+    full_p = jax.random.randint(jax.random.fold_in(key, 32), (32,), 0,
+                                cfg.vocab)
+    eng.submit(Request(rid=32, prompt=full_p, max_new=5))
+    done = eng.run()
+    got = next(c for c in done if c.rid == 32)
+    assert got.tokens == manual_greedy(params, cfg, full_p, 1, 32)
+    assert len(got.tokens) == 1
+    assert eng.pool.live_pages() == 0
+    eng.completed.clear()            # run() accumulates completions
     for i in range(3):               # more requests than slots
         eng.submit(Request(rid=i, prompt=jax.random.randint(
             jax.random.fold_in(key, i), (5,), 0, cfg.vocab), max_new=1))
