@@ -2,8 +2,9 @@
 
 Prints ``name,us_per_call,derived`` CSV rows and writes the PR 2
 block-pipeline artifact (BENCH_PR2.json), the PR 3 paged-serving
-artifact (BENCH_PR3.json) and the PR 4 decode weight-traffic artifact
-(BENCH_PR4.json).
+artifact (BENCH_PR3.json), the PR 4 decode weight-traffic artifact
+(BENCH_PR4.json) and the PR 5 chunked-prefill TTFT artifact
+(BENCH_PR5.json).
 """
 from __future__ import annotations
 
@@ -16,7 +17,7 @@ def main() -> None:
     from benchmarks.kernel_bench import kernel_suite
     from benchmarks.paper_tables import ALL
     from benchmarks.roofline_report import roofline_report
-    from benchmarks.serve_bench import serve_bench
+    from benchmarks.serve_bench import chunked_prefill_bench, serve_bench
 
     rows = []
 
@@ -32,6 +33,7 @@ def main() -> None:
     block_bench(emit, json_path="BENCH_PR2.json")
     serve_bench(emit, json_path="BENCH_PR3.json")
     decode_bench(emit, json_path="BENCH_PR4.json")
+    chunked_prefill_bench(emit, json_path="BENCH_PR5.json")
     sys.stdout.flush()
 
 

@@ -1,7 +1,7 @@
-"""PR 3 bench: paged-KV serving engine on a mixed-length request trace.
+"""PR 3 + PR 5 serving benches: paged-KV engine traces.
 
-Emits ``bench.serve.*`` CSV rows and writes ``BENCH_PR3.json`` (uploaded
-as a CI artifact) with three sections:
+``serve_bench`` (PR 3) emits ``bench.serve.*`` CSV rows and writes
+``BENCH_PR3.json`` (uploaded as a CI artifact) with three sections:
 
   * ``throughput`` — decoded tokens/s and mean/max time-to-first-token
     over a mixed-length synthetic trace on the reduced deepseek config.
@@ -10,8 +10,19 @@ as a CI artifact) with three sections:
     ``n_slots x max_len`` lockstep caches (``core/block_traffic.py``).
     The ratio is geometry-independent, so the smoke-model trace prices
     the full-size arch too.
-  * ``compiles``   — compiled-program counts of the two serving entry
-    points (prefill buckets + the single decode step program).
+  * ``compiles``   — compiled-program counts of the serving entry
+    points (prefill buckets + chunk shapes + the decode step program).
+
+``chunked_prefill_bench`` (PR 5) measures the TTFT cliff: a max-bucket
+prompt is admitted ahead of short co-resident requests, with chunked
+prefill off and on. Off, the shorts' first tokens (and the decode
+slots' inter-token cadence) wait behind one monolithic largest-bucket
+program; on, the prompt prefills as bounded row panels interleaved with
+decode steps. Writes ``BENCH_PR5.json`` with measured p50/p95 TTFT and
+inter-token latency both ways plus the modeled stall/re-read trade
+(``core/block_traffic.chunked_prefill_traffic``), and *asserts* the
+acceptance criterion — p95 TTFT of the co-resident shorts strictly
+improves with chunking on.
 """
 from __future__ import annotations
 
@@ -22,9 +33,11 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import REDUCED
-from repro.core.block_traffic import serve_kv_traffic
+from repro.core.block_traffic import (chunked_prefill_traffic_cfg,
+                                      serve_kv_traffic)
 from repro.core.types import PagingConfig
 from repro.models import lm
 from repro.serve.engine import Engine, Request
@@ -99,14 +112,113 @@ def serve_bench(emit, json_path=None, *, n_slots: int = 4,
     return result
 
 
+def chunked_prefill_bench(emit, json_path=None, *, n_slots: int = 4,
+                          max_len: int = 128, page_size: int = 16,
+                          chunk: int = 32, n_shorts: int = 3,
+                          short_len: int = 8, short_new: int = 16):
+    """TTFT-cliff A/B: one near-max-bucket prompt admitted ahead of
+    ``n_shorts`` short co-resident requests, chunked prefill off vs on."""
+    cfg = REDUCED["deepseek-7b"]()
+    key = jax.random.PRNGKey(0)
+    params, _ = lm.init_lm(key, cfg, dtype=jnp.float32)
+    big_len = max_len - 8                 # pads to the max bucket;
+    #                                       leaves room to decode
+
+    def drive(chunk_size):
+        eng = Engine(params, cfg, n_slots=n_slots, max_len=max_len,
+                     eos_id=-1,
+                     paging=PagingConfig(page_size=page_size,
+                                         prefill_chunk=chunk_size))
+        prompts = {-1: jnp.zeros((big_len,), jnp.int32)}
+        for i in range(n_shorts):
+            prompts[i] = jax.random.randint(
+                jax.random.fold_in(key, i), (short_len,), 0, cfg.vocab)
+
+        def submit_all(tag):
+            # the cliff scenario: the big prompt is at the queue head,
+            # shorts land co-resident right behind it
+            eng.submit(Request(rid=tag * 100 - 1, prompt=prompts[-1],
+                               max_new=2))
+            for i in range(n_shorts):
+                eng.submit(Request(rid=tag * 100 + i, prompt=prompts[i],
+                                   max_new=short_new))
+
+        submit_all(0)                     # warm-up: compile every program
+        eng.run()
+        eng.completed.clear()
+        submit_all(1)
+        t0 = time.perf_counter()
+        done = eng.run()
+        wall = time.perf_counter() - t0
+
+        shorts = [c for c in done if c.rid >= 100]
+        big = next(c for c in done if c.rid == 99)
+        ttfts = np.asarray([c.ttft_s for c in shorts]) * 1e3
+        itls = np.asarray([g for c in shorts for g in c.itl_s]) * 1e3
+        counts = eng.compile_counts()
+        n_chunk_shapes = len([b for b in eng.buckets
+                              if b <= eng.prefill_chunk])
+        assert (counts["prefill"] + counts["chunk"] + counts["step"]
+                <= len(eng.buckets) + n_chunk_shapes + 1), counts
+        return {
+            "short_ttft_ms_p50": float(np.percentile(ttfts, 50)),
+            "short_ttft_ms_p95": float(np.percentile(ttfts, 95)),
+            "short_itl_ms_p50": float(np.percentile(itls, 50)),
+            "short_itl_ms_p95": float(np.percentile(itls, 95)),
+            "big_ttft_ms": big.ttft_s * 1e3,
+            "wall_s": wall,
+            "compiles": counts,
+        }
+
+    off = drive(0)
+    on = drive(chunk)
+    improves = on["short_ttft_ms_p95"] < off["short_ttft_ms_p95"]
+    modeled = chunked_prefill_traffic_cfg(cfg, big_len, chunk_size=chunk,
+                                          page_size=page_size)
+    emit("bench.serve.chunked.ttft_p95",
+         on["short_ttft_ms_p95"] * 1e3,
+         f"co-resident p95 TTFT {off['short_ttft_ms_p95']:.1f}ms -> "
+         f"{on['short_ttft_ms_p95']:.1f}ms (chunk={chunk})")
+    emit("bench.serve.chunked.itl_p95", on["short_itl_ms_p95"] * 1e3,
+         f"co-resident p95 ITL {off['short_itl_ms_p95']:.1f}ms -> "
+         f"{on['short_itl_ms_p95']:.1f}ms")
+    emit("bench.serve.chunked.stall", 0,
+         f"stall rows {modeled['stall_rows_one_shot']} -> "
+         f"{modeled['stall_rows_chunked']}; prefix reread "
+         f"{modeled['prefix_reread_bytes']}B over "
+         f"{modeled['n_chunks']} chunks")
+
+    result = {"off": off, "on": on,
+              "p95_ttft_improves": bool(improves),
+              "modeled": modeled,
+              "config": {"arch": cfg.name, "n_slots": n_slots,
+                         "max_len": max_len, "page_size": page_size,
+                         "prefill_chunk": chunk, "big_len": big_len,
+                         "n_shorts": n_shorts, "short_len": short_len,
+                         "short_new": short_new}}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(result, f, indent=2)
+    # acceptance (ISSUE 5): admitting a max-bucket prompt must no longer
+    # cliff the co-resident decode slots' first tokens
+    assert improves, (
+        "chunked prefill did not improve co-resident p95 TTFT: "
+        f"off={off['short_ttft_ms_p95']:.2f}ms "
+        f"on={on['short_ttft_ms_p95']:.2f}ms")
+    return result
+
+
 def main():
     json_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_PR3.json"
+    json_path5 = sys.argv[2] if len(sys.argv) > 2 else "BENCH_PR5.json"
 
     def emit(name, us, derived):
         print(f"{name},{us:.1f},{derived}")
 
     serve_bench(emit, json_path=json_path)
     print(f"wrote {json_path}")
+    chunked_prefill_bench(emit, json_path=json_path5)
+    print(f"wrote {json_path5}")
 
 
 if __name__ == "__main__":

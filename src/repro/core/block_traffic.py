@@ -26,6 +26,11 @@ max_len`` rows per layer per step, block-table decode streams only
 each live sequence's pages. Used by ``benchmarks/serve_bench.py``
 (BENCH_PR3.json) and its acceptance test.
 
+The chunked-prefill section (PR 5) prices the serving engine's chunked
+admission: the monolithic-bucket decode stall it removes against the
+prefix-page re-reads resumability costs. Used by
+``benchmarks/serve_bench.py`` (BENCH_PR5.json) and its acceptance test.
+
 The decode weight-traffic section prices the PR 4 param-layout
 migration: with wqkv / wgi stored pre-fused the kernels stream the
 panels straight from the param tree; the PR 2 per-call regime instead
@@ -236,6 +241,57 @@ def paged_kv_step_bytes(lengths, *, page_size: int, n_global: int,
             ring = min(live, -(-min(window, ln) // page_size) * page_size)
             total += n_local * ring * row
     return total
+
+
+def chunked_prefill_traffic(plen: int, *, chunk_size: int, page_size: int,
+                            n_global: int, n_local: int = 0,
+                            window: int = 0, n_kv_heads: int,
+                            head_dim: int, dtype_bytes: int = 2) -> dict:
+    """Model the chunked-prefill trade for one admitted prompt: the
+    decode stall it removes vs the prefix re-read bytes it adds.
+
+    * Stall: with monolithic bucketed prefill every co-resident decode
+      slot waits for ONE program that processes the whole prompt —
+      ``plen`` row-panel tokens between decode steps. Chunked prefill
+      bounds that to ``chunk_size`` tokens per engine step (the paper's
+      fixed-granularity row-panel execution, restored at admission).
+    * Extra bytes: each chunk re-gathers the slot's already-written
+      prefix pages (whole pages — a partial tail page streams in full;
+      windowed layers at most the ring), KV the one-shot program kept
+      on chip. This is the price of resumability, reported so the bench
+      artifact shows both sides of the trade. The chunk's own KV write
+      is identical in both regimes and cancels.
+
+    Returns ``{"n_chunks", "stall_rows_one_shot", "stall_rows_chunked",
+    "prefix_reread_bytes"}``.
+    """
+    row = 2 * n_kv_heads * head_dim * dtype_bytes          # K + V
+    reread = 0
+    offs = list(range(0, plen, chunk_size))
+    for off in offs[1:]:                                   # chunk 0: none
+        live = -(-off // page_size) * page_size            # page-rounded
+        reread += n_global * live * row
+        if n_local:
+            ring = min(live, -(-min(window, off) // page_size) * page_size)
+            reread += n_local * ring * row
+    last = plen - offs[-1]
+    return {"n_chunks": len(offs),
+            "stall_rows_one_shot": plen,
+            "stall_rows_chunked": max(chunk_size if len(offs) > 1 else 0,
+                                      last),
+            "prefix_reread_bytes": reread}
+
+
+def chunked_prefill_traffic_cfg(cfg, plen: int, *, chunk_size: int,
+                                page_size: int,
+                                dtype_bytes: int = 2) -> dict:
+    """:func:`chunked_prefill_traffic` with layer counts from a config."""
+    n_global, n_local, window = kv_layer_counts(cfg)
+    return chunked_prefill_traffic(
+        plen, chunk_size=chunk_size, page_size=page_size,
+        n_global=n_global, n_local=n_local, window=window,
+        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        dtype_bytes=dtype_bytes)
 
 
 def serve_kv_traffic(trace, cfg, *, n_slots: int, max_len: int,

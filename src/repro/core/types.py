@@ -57,21 +57,31 @@ class PagingConfig:
     """Paged-KV serving geometry (vLLM-style block tables).
 
     The serving engine carves each attention layer's KV storage into a
-    global pool of fixed-size pages ``(n_pages + 1, page_size, Hkv, hd)``
-    and maps every slot's logical positions onto physical pages through a
-    per-slot block table. Physical page index ``n_pages`` is the *trash
-    page*: block tables of idle slots point at it so lockstep decode
-    writes from retired slots land in storage nobody reads.
+    global pool of fixed-size pages ``(n_pages + n_slots, page_size,
+    Hkv, hd)`` and maps every slot's logical positions onto physical
+    pages through a per-slot block table. Physical page ``n_pages +
+    slot`` is the slot's private *scratch page*: idle and mid-prefill
+    slots' tables point at it so lockstep decode writes land in storage
+    nobody reads — and, being per-slot, never serialize on one page.
 
     ``n_pages == 0`` means "size for full occupancy": the engine
     allocates ``n_slots * ceil(max_len / page_size)`` real pages, i.e.
     the same capacity as the dense lockstep caches; smaller values
     oversubscribe and the engine defers admissions until pages free up.
+
+    ``prefill_chunk > 0`` enables *chunked prefill*: prompts longer than
+    the chunk split into successive row panels processed across engine
+    steps, interleaved with decode — the monolithic largest-bucket
+    prefill program no longer stalls co-resident decode slots (the TTFT
+    cliff). The chunk must sit on the bucket ladder (a power of two) so
+    compiled chunk shapes stay bounded, and requires a bucketing-capable
+    arch (pure causal attention).
     """
 
     page_size: int = 16            # tokens per KV page
     n_pages: int = 0               # real pages per layer pool (0 => full)
     min_bucket: int = 16           # smallest prefill padding bucket
+    prefill_chunk: int = 0         # chunked-prefill panel size (0 => off)
 
 
 @dataclasses.dataclass(frozen=True)

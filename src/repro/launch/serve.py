@@ -31,6 +31,16 @@ def main(argv=None):
     ap.add_argument("--n-pages", type=int, default=0,
                     help="real pages per layer pool (0 = full occupancy; "
                          "smaller oversubscribes and defers admissions)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked-prefill panel size (a bucket-ladder "
+                         "power of two; 0 = monolithic bucketed prefill). "
+                         "Prompts longer than this split across engine "
+                         "steps interleaved with decode, removing the "
+                         "TTFT cliff the largest bucket causes")
+    ap.add_argument("--prompt-len", type=int, default=4,
+                    help="base synthetic prompt length (request i gets "
+                         "prompt_len + i %% 8 tokens); raise above "
+                         "--prefill-chunk to drive chunked admissions")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -41,9 +51,10 @@ def main(argv=None):
     eng = Engine(params, cfg, n_slots=args.slots, max_len=args.max_len,
                  eos_id=-1, temperature=args.temperature, seed=args.seed,
                  paging=PagingConfig(page_size=args.page_size,
-                                     n_pages=args.n_pages))
+                                     n_pages=args.n_pages,
+                                     prefill_chunk=args.prefill_chunk))
     for i in range(args.requests):
-        plen = 4 + (i % 8)
+        plen = min(args.prompt_len + (i % 8), args.max_len)
         prompt = jax.random.randint(jax.random.fold_in(key, i),
                                     (plen,), 0, cfg.vocab)
         eng.submit(Request(rid=i, prompt=prompt, max_new=args.max_new))
@@ -70,7 +81,8 @@ def main(argv=None):
     else:
         kv = "KV traffic: n/a (no attention layers)"
     print(f"{kv}; compiles: prefill={compiles['prefill']} "
-          f"step={compiles['step']} buckets={eng.buckets}")
+          f"chunk={compiles['chunk']} step={compiles['step']} "
+          f"buckets={eng.buckets} prefill_chunk={eng.prefill_chunk}")
 
 
 if __name__ == "__main__":

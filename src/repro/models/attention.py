@@ -98,15 +98,18 @@ def cache_specs(window: int = 0):
 
 
 class PagedKVCache(NamedTuple):
-    """Per-layer paged KV pool. k/v: (n_pages + 1, page_size, Hkv, hd).
+    """Per-layer paged KV pool. k/v: (n_pages + n_slots, page_size,
+    Hkv, hd).
 
     Physical pages are shared by every slot in the serving batch; the
     logical order of a slot's tokens lives in the engine's block table
     ((B, max_pages) int32: logical page ``l`` of row ``b`` is physical
-    page ``table[b, l]``). The last physical page is the trash page —
-    idle slots' tables point at it so lockstep writes from retired slots
-    never touch live storage. Sliding-window layers reuse the first
-    ``window // page_size`` table entries as a ring of pages.
+    page ``table[b, l]``). The last ``n_slots`` physical pages are
+    per-slot scratch pages — idle and mid-prefill slots' tables point
+    at their own row so lockstep writes from those slots never touch
+    live storage (and never serialize on one shared page).
+    Sliding-window layers reuse the first ``window // page_size`` table
+    entries as a ring of pages.
     """
     k: jnp.ndarray
     v: jnp.ndarray
@@ -201,7 +204,8 @@ def _chunked_fwd(q, k, v, limit, *, causal, window, q_offset, chunk):
     return out.reshape(b, hq, sq, hd).astype(q.dtype), lse
 
 
-def _paged_fwd(q, k_pool, v_pool, pages, limit, *, chunk):
+def _paged_fwd(q, k_pool, v_pool, pages, limit, *, chunk, q_offset=None,
+               window: int = 0):
     """Online-softmax over a paged KV pool — the same row-wise LSE math
     as :func:`_chunked_fwd`, but each scan chunk *gathers* its KV rows
     from the pool through the block table instead of slicing a dense
@@ -210,6 +214,17 @@ def _paged_fwd(q, k_pool, v_pool, pages, limit, *, chunk):
     q: (B,Hq,Sq,hd); k_pool/v_pool: (n_pages, page_size, Hkv, hd);
     pages: (B, n_logical_pages) int32 block table; limit: (B,) valid
     token counts (logical positions >= limit are masked out).
+
+    ``q_offset`` ((B,) int32) turns the single-position decode gather
+    into a multi-query *prefix* gather for chunked prefill: query row i
+    sits at absolute position ``q_offset + i`` and attends causally
+    (vacuous while every cached key is below ``limit <= q_offset``, but
+    kept explicit so the mask is correct for any limit). ``window``
+    marks the table as a sliding-window *ring* of ``window / page_size``
+    pages: ring slot r holds the newest written position ≡ r (mod
+    window) strictly below ``limit``, and each query additionally masks
+    keys at or below ``q_pos - window``. The decode path (q_offset=None,
+    window=0) is bit-identical to before.
     Returns (out (B,Hq,Sq,hd), lse (B,Hkv,g,Sq) fp32).
     """
     b, hq, sq, hd = q.shape
@@ -233,8 +248,27 @@ def _paged_fwd(q, k_pool, v_pool, pages, limit, *, chunk):
         vb = jnp.take(v_pool, pid, axis=0)
         kb = kb.reshape(b, ppc * ps, hkv, hd).transpose(0, 2, 1, 3)
         vb = vb.reshape(b, ppc * ps, hkv, hd).transpose(0, 2, 1, 3)
-        k_pos = base + jnp.arange(ppc * ps)                    # logical
-        mask = (k_pos[None, :] < limit[:, None])[:, None, None, None, :]
+        r = base + jnp.arange(ppc * ps)      # logical slot index
+        if window:
+            # ring: recover the absolute position each slot holds (the
+            # newest p ≡ r (mod window) below limit); unwritten slots
+            # (limit < window) resolve negative and mask out, padded
+            # table slots (r >= window) are never ring storage
+            k_pos = (r[None, :] + ((limit[:, None] - 1 - r[None, :])
+                                   // window) * window)        # (B, K)
+            valid = ((r[None, :] < window) & (k_pos >= 0)
+                     & (k_pos < limit[:, None]))
+        else:
+            k_pos = jnp.broadcast_to(r[None, :], (b, r.shape[0]))
+            valid = k_pos < limit[:, None]
+        if q_offset is None:
+            mask = valid[:, None, None, None, :]
+        else:
+            q_pos = q_offset[:, None] + jnp.arange(sq)[None]   # (B, Sq)
+            qm = k_pos[:, None, :] <= q_pos[..., None]         # causal
+            if window:
+                qm &= k_pos[:, None, :] > (q_pos[..., None] - window)
+            mask = (valid[:, None, :] & qm)[:, None, None, :, :]
         return _online_update(carry, qg, kb, vb, mask, scale), None
 
     m0 = jnp.full((b, hkv, g, sq), -1e30, jnp.float32)
@@ -490,6 +524,112 @@ def write_pages(pool: PagedKVCache, k_new, v_new, pos, pages,
         v=pool.v.at[pid, off].set(v_new[:, 0].astype(pool.v.dtype)))
 
 
+def _merge_partials(out_a, lse_a, out_b, lse_b):
+    """Combine two partial online-softmax results over *disjoint* KV
+    sets (the prefix-page gather and the in-flight chunk) into the exact
+    softmax over their union — the standard flash-decode LSE merge.
+    out: (B,Hq,Sq,hd); lse: (B,Hkv,g,Sq) fp32. A fully-masked partial
+    carries lse ≈ -1e30 and drops out with weight 0 (the max-shift keeps
+    the other side's weight at exp(0) = 1, so the denominator never
+    vanishes)."""
+    b, hq, sq, hd = out_a.shape
+    hkv, g = lse_a.shape[1], lse_a.shape[2]
+    oa = out_a.reshape(b, hkv, g, sq, hd).astype(jnp.float32)
+    ob = out_b.reshape(b, hkv, g, sq, hd).astype(jnp.float32)
+    m = jnp.maximum(lse_a, lse_b)
+    wa = jnp.exp(lse_a - m)
+    wb = jnp.exp(lse_b - m)
+    out = ((oa * wa[..., None] + ob * wb[..., None])
+           / (wa + wb)[..., None])
+    return out.reshape(b, hq, sq, hd).astype(out_a.dtype)
+
+
+def write_chunk_pages(pool: PagedKVCache, k_new, v_new, offset, chunk_len,
+                      pages, window: int = 0):
+    """Append a prefill chunk's K/V (B, Sc, Hkv, hd) at logical
+    positions ``offset .. offset + chunk_len - 1`` through the block
+    table ``pages`` (B, n_logical) — the multi-token generalization of
+    :func:`write_pages`. ``offset`` is a scalar or per-row (B,) int32.
+    Right padding (rows >= chunk_len) routes out of range and is
+    dropped. Windowed layers write through the ring (``pos % window``)
+    and keep only the chunk's last ``window`` positions — earlier rows
+    would be clobbered by a later in-chunk position at the same ring
+    slot, and no future query needs them — which also keeps the
+    scatter's target indices duplicate-free."""
+    b, sc = k_new.shape[:2]
+    ps = pool.k.shape[1]
+    i = jnp.arange(sc)
+    offset = jnp.broadcast_to(jnp.asarray(offset), (b,))
+    pos = offset[:, None] + i[None]                            # (B, Sc)
+    valid = jnp.broadcast_to(i[None] < chunk_len, (b, sc))
+    r = pos
+    if window:
+        valid &= pos >= (offset + chunk_len)[:, None] - window
+        r = pos % window
+    lp = jnp.clip(r // ps, 0, pages.shape[1] - 1)              # (B, Sc)
+    pid = jnp.where(valid, jnp.take_along_axis(pages, lp, axis=1),
+                    pool.k.shape[0])
+    off = r % ps
+    return PagedKVCache(
+        k=pool.k.at[pid, off].set(k_new.astype(pool.k.dtype),
+                                  mode="drop"),
+        v=pool.v.at[pid, off].set(v_new.astype(pool.v.dtype),
+                                  mode="drop"))
+
+
+def paged_chunk_apply(params, x, pool: PagedKVCache, *, cfg: ModelConfig,
+                      offset, chunk_len, pages, window: int = 0,
+                      norm: Optional[ops.NormSpec] = None, residual=None):
+    """Chunked-prefill forward for one attention layer: a row panel of
+    ``Sc`` prompt tokens starting at absolute position ``offset``
+    ((B,) int32, traced), of which the first ``chunk_len`` are real
+    (right padding masked). x: (B, Sc, d). Returns (out, new_pool);
+    norm/residual as in :func:`apply`.
+
+    Attention is the exact softmax over prefix ∪ chunk, assembled from
+    two partials sharing the row-wise ``_online_update`` math:
+
+      * the already-written KV pages, via the multi-query
+        :func:`_paged_fwd` prefix gather (per-query window masking,
+        ring position recovery for sliding-window layers);
+      * the in-flight chunk itself, causally, via :func:`_chunked_fwd`
+        in chunk-relative coordinates (the window constraint is
+        translation-invariant);
+
+    merged by :func:`_merge_partials`. The chunk's own K/V then append
+    at the position offset (:func:`write_chunk_pages`) — strictly after
+    the prefix gather, so ring writes cannot clobber prefix keys the
+    chunk's queries still need.
+    """
+    b, sc, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    positions = offset[:, None] + jnp.arange(sc, dtype=jnp.int32)[None]
+    q, k, v = _project_qkv(params, x, cfg, norm)
+    q = q.reshape(b, sc, hq, hd)
+    k = k.reshape(b, sc, hkv, hd)
+    v = v.reshape(b, sc, hkv, hd)
+    q, k = _apply_rope(q, k, cfg, positions)
+    qh = q.transpose(0, 2, 1, 3)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    clen = jnp.broadcast_to(jnp.asarray(chunk_len), (b,))
+    with jax.named_scope("rowwise_chunk_attn"):
+        out_c, lse_c = _chunked_fwd(qh, kh, vh, clen, causal=True,
+                                    window=window, q_offset=0, chunk=1024)
+        ps = pool.k.shape[1]
+        tbl = pages[:, :max(window // ps, 1)] if window else pages
+        out_p, lse_p = _paged_fwd(qh, pool.k, pool.v, tbl,
+                                  jnp.broadcast_to(jnp.asarray(offset),
+                                                   (b,)),
+                                  chunk=1024, q_offset=offset,
+                                  window=window)
+        out = _merge_partials(out_c, lse_c, out_p, lse_p)
+    pool = write_chunk_pages(pool, k, v, offset, chunk_len, pages,
+                             window)
+    out = out.transpose(0, 2, 1, 3).reshape(b, sc, hq * hd)
+    return ops.matmul(out, params["wo"], residual=residual), pool
+
+
 def paged_decode_apply(params, x, pool: PagedKVCache, *, cfg: ModelConfig,
                        lengths, pages, window: int = 0,
                        norm: Optional[ops.NormSpec] = None, residual=None):
@@ -499,7 +639,8 @@ def paged_decode_apply(params, x, pool: PagedKVCache, *, cfg: ModelConfig,
 
     The attention core is the same online-softmax row-wise primitive as
     the dense path, but each chunk gathers only the slot's live pages —
-    idle table entries point at the trash page and are masked by kv_len.
+    idle table entries point at the slot's scratch page and are masked
+    by kv_len.
     """
     b = x.shape[0]
     hq, hd = cfg.n_heads, cfg.head_dim

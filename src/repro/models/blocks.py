@@ -76,13 +76,26 @@ class BlockIO(NamedTuple):
 
 def apply_block(blk: BlockDef, params, x, *, cfg: ModelConfig, mode: str,
                 positions=None, lengths=None, cache=None, enc_out=None,
-                pages=None,
+                pages=None, chunk_len=None,
                 window_override: Optional[int] = None) -> tuple:
-    """mode: 'train' | 'prefill' | 'decode'. Returns (x, BlockIO).
+    """mode: 'train' | 'prefill' | 'decode' | 'chunk'. Returns
+    (x, BlockIO).
 
     pages: (B, max_pages) int32 block table for paged decode — required
     when the decode cache's KV leaf is a :class:`PagedKVCache` pool.
+    'chunk' is the serving engine's chunked-prefill mode: x is a row
+    panel of prompt tokens at position offset ``lengths`` (the tokens
+    already in the paged cache, exactly the decode-mode semantics) of
+    which the first ``chunk_len`` are real; attention layers attend
+    prefix pages + the in-flight chunk and append their KV. Only
+    causal-attention archs may chunk (``paging.supports_bucketing`` —
+    recurrent mixers would fold the split into their state).
     """
+    if mode == "chunk":
+        assert blk.mixer == "attn" and not blk.cross_attn, (
+            "chunked prefill requires every position's state to be "
+            f"causal-attention KV; {blk.mixer}/cross_attn blocks must "
+            "prefill in one shot (paging.supports_bucketing)")
     aux = jnp.zeros((), jnp.float32)
     new_cache = {}
     prefill_state = {}
@@ -108,6 +121,12 @@ def apply_block(blk: BlockDef, params, x, *, cfg: ModelConfig, mode: str,
                     params["attn"], h, cache["kv"], cfg=cfg,
                     lengths=lengths, window=window, norm=nspec,
                     residual=res)
+            new_cache["kv"] = kv_new
+        elif mode == "chunk":
+            out, kv_new = attention.paged_chunk_apply(
+                params["attn"], h, cache["kv"], cfg=cfg, offset=lengths,
+                chunk_len=chunk_len, pages=pages, window=window,
+                norm=nspec, residual=res)
             new_cache["kv"] = kv_new
         else:
             out, (k, v) = attention.apply(params["attn"], h, cfg=cfg,

@@ -209,7 +209,7 @@ def unfuse_params(cfg: ModelConfig, params):
 
 def _run_stage(stage: Stage, sp, x, *, cfg: ModelConfig, mode: str,
                positions=None, lengths=None, cache=None, enc_out=None,
-               pages=None, causal=True, remat=False):
+               pages=None, chunk_len=None, causal=True, remat=False):
     """Scan a stage. Returns (x, aux, new_cache_or_prefill_states).
     ``pages`` (the serving block table) is scan-invariant: every layer
     indexes its own pool through the same per-slot table."""
@@ -226,9 +226,10 @@ def _run_stage(stage: Stage, sp, x, *, cfg: ModelConfig, mode: str,
             x, io = blocks.apply_block(
                 blk, bp, x, cfg=cfg, mode=mode, positions=positions,
                 lengths=lengths, cache=csl, enc_out=enc_out, pages=pages,
+                chunk_len=chunk_len,
                 window_override=None if causal else 0)
             aux = aux + io.aux
-            if mode == "decode" and io.new_cache is not None:
+            if mode in ("decode", "chunk") and io.new_cache is not None:
                 out_states[key] = io.new_cache
             elif mode == "prefill" and io.prefill_state is not None:
                 out_states[key] = io.prefill_state
@@ -360,9 +361,9 @@ def _slot_cache_init(blk, cfg: ModelConfig, repeat, batch, alloc, dtype,
     c = {}
     if blk.mixer == "attn":
         if pool is not None:
-            # paged serving: (R, n_pages + 1 trash, page_size, Hkv, hd)
+            # paged serving: (R, n_pages + n_slots scratch, ps, Hkv, hd)
             n_pages, ps = pool
-            shape = (repeat, n_pages + 1, ps, cfg.n_kv_heads,
+            shape = (repeat, n_pages + batch, ps, cfg.n_kv_heads,
                      cfg.head_dim)
             c["kv"] = attention.PagedKVCache(k=jnp.zeros(shape, dtype),
                                              v=jnp.zeros(shape, dtype))
@@ -414,9 +415,11 @@ def init_cache(cfg: ModelConfig, batch: int, alloc: int, dtype=None):
 def init_paged_cache(cfg: ModelConfig, n_slots: int, max_len: int, *,
                      page_size: int = 16, n_pages: int = 0, dtype=None):
     """Serving cache with paged attention KV: every attention layer gets
-    a page pool ``(R, n_pages + 1, page_size, Hkv, hd)`` indexed by the
-    engine's block tables (the +1 is the trash page idle slots write
-    to); recurrent / cross-attention state stays per-slot dense.
+    a page pool ``(R, n_pages + n_slots, page_size, Hkv, hd)`` indexed
+    by the engine's block tables (the ``+ n_slots`` are per-slot
+    *scratch* pages idle and mid-prefill slots write to — private rows,
+    so lockstep writes from idle slots never serialize on one shared
+    page); recurrent / cross-attention state stays per-slot dense.
 
     ``n_pages == 0`` sizes the pool for full occupancy
     (``n_slots * ceil(max_len / page_size)`` real pages); pass less to
@@ -611,6 +614,45 @@ def insert_prefill(cfg: ModelConfig, cache, states, *, slot, pages, plen,
             sc[key] = c
         out.append(sc)
     return out
+
+
+def prefill_chunk(params, cache, tokens, cfg: ModelConfig, *, offset,
+                  chunk_len, pages):
+    """Chunked-prefill step: one ``prefill_states``-style forward over a
+    row panel of the prompt, resumable across engine steps.
+
+    tokens: (1, Sc_pad) — a chunk of a longer prompt starting at
+    absolute position ``offset`` (traced scalar; tokens already in the
+    paged cache), right-padded to a static chunk shape with the true
+    length in ``chunk_len`` (traced, <= Sc_pad). Every attention layer
+    attends the slot's already-written KV pages plus the in-flight
+    chunk (``attention.paged_chunk_apply``) and appends the chunk's KV
+    at the position offset, so successive calls rebuild exactly the KV
+    state one-shot prefill + ``insert_prefill`` would have written.
+    Returns (next-token logits (1, V) at chunk position chunk_len - 1,
+    new_cache). Only causal-attention archs may chunk (the engine gates
+    on ``paging.supports_bucketing``); the final chunk's logits are the
+    prompt's first-token logits.
+    """
+    b, s = tokens.shape
+    offset = jnp.asarray(offset, jnp.int32)
+    x = embed(params, tokens, cfg, None)
+    x = logical_constraint(x, "batch", "seq", "act_embed")
+    if cfg.rope == "none" and not cfg.encdec:
+        pe = rope.sinusoidal_embedding(1 << 16, cfg.d_model)
+        x = x + jax.lax.dynamic_slice_in_dim(pe, offset, s,
+                                             axis=0)[None].astype(x.dtype)
+    lengths = jnp.broadcast_to(offset, (b,))
+    x, _, new_cache = _run_stages(params["stages"], cfg.stages(), x,
+                                  cfg=cfg, mode="chunk", positions=None,
+                                  lengths=lengths, cache=cache,
+                                  pages=pages, chunk_len=chunk_len,
+                                  remat=False)
+    idx = (jnp.asarray(chunk_len, jnp.int32) - 1)[None, None, None]
+    xl = jnp.take_along_axis(
+        x, jnp.broadcast_to(idx, (b, 1, x.shape[-1])), axis=1)
+    logits = unembed(params, xl, cfg)
+    return logits[:, 0], new_cache
 
 
 def decode_step(params, cache, tokens, lengths, cfg: ModelConfig,

@@ -15,6 +15,14 @@ traffic. All host <-> device choreography is compile-stable:
     continuous batching over arbitrary prompt lengths compiles at most
     ``n_buckets + 1`` programs (archs with recurrent/MoE state prefill
     at exact lengths — see ``paging.supports_bucketing``);
+  * with ``paging.prefill_chunk`` set, prompts longer than the chunk
+    *chunk-prefill*: each engine step advances every mid-prefill slot by
+    one bounded row panel (``lm.prefill_chunk`` — prefix-page attention
+    + positioned KV append), interleaved with the decode step, so the
+    largest bucket's monolithic program never stalls co-resident decode
+    slots (the TTFT cliff). Only the final chunk's sampled token is
+    fetched; chunk shapes stay on the bucket ladder, so the compile
+    count is bounded by ``n_buckets + n_chunk_shapes + 1``;
   * the decode loop fetches exactly one device value per step (the
     sampled tokens); sequence lengths are mirrored on the host.
 """
@@ -23,7 +31,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,8 +41,9 @@ from repro.core import quant
 from repro.core.types import ModelConfig, PagingConfig
 from repro.models import lm
 from repro.serve import sampling
-from repro.serve.paging import (PagePool, bucket_for, default_buckets,
-                                page_aligned_size, supports_bucketing)
+from repro.serve.paging import (PagePool, bucket_for, chunk_schedule,
+                                default_buckets, page_aligned_size,
+                                supports_bucketing)
 
 
 @dataclasses.dataclass
@@ -53,6 +62,21 @@ class Completion:
     latency_s: float                 # submission -> retirement
     ttft_s: float = 0.0              # submission -> first token (queue
     #                                  wait + prefill, the serving TTFT)
+    itl_s: List[float] = dataclasses.field(default_factory=list)
+    #                                  inter-token gaps (len(tokens) - 1
+    #                                  entries): the stall a co-resident
+    #                                  prefill admission injects shows up
+    #                                  here as a latency spike
+
+
+@dataclasses.dataclass
+class _ChunkState:
+    """Per-slot chunked-prefill progress (host side)."""
+    req: Request
+    t0: float                        # submission wall time (TTFT base)
+    prompt: np.ndarray               # (S,) int32 host copy
+    sched: List[tuple]               # remaining (offset, len, shape)
+    #                                  panels (paging.chunk_schedule)
 
 
 class Engine:
@@ -102,18 +126,34 @@ class Engine:
         else:
             self.buckets = None      # exact-length prefill (recurrent/MoE)
 
+        self.prefill_chunk = paging.prefill_chunk
+        if self.prefill_chunk:
+            if self.buckets is None:
+                raise ValueError(
+                    f"{cfg.name} carries recurrent/MoE prefill state: a "
+                    "prompt cannot be split across chunk forwards "
+                    "(chunked prefill needs pure causal-attention KV)")
+            if self.prefill_chunk not in self.buckets:
+                raise ValueError(
+                    f"prefill_chunk={self.prefill_chunk} must sit on the "
+                    f"bucket ladder {self.buckets} (chunk shapes reuse "
+                    "the ladder to bound the compile count)")
+
         self.lengths = jnp.zeros((n_slots,), jnp.int32)
         self._host_len = np.zeros((n_slots,), np.int64)
         self._last = jnp.zeros((n_slots, 1), jnp.int32)
         self._temps = jnp.zeros((n_slots,), jnp.float32)
         self._tables_dev = jnp.asarray(self.pool.tables)
-        self._tables_version = self.pool.version
+        self._tables_key = (self.pool.version, frozenset())
         self.active: List[Optional[Request]] = [None] * n_slots
+        self.chunking: Dict[int, _ChunkState] = {}   # slot -> progress
         self.out_tokens: List[List[int]] = [[] for _ in range(n_slots)]
         self.started = [0.0] * n_slots
         self.ttft = [0.0] * n_slots
+        self._token_times: List[List[float]] = [[] for _ in range(n_slots)]
         self.queue: deque = deque()  # (Request, submission wall time)
         self._prefill_lens: set = set()   # distinct padded lengths seen
+        self._chunk_shapes: set = set()   # distinct chunk panel shapes
         self._stepped = False
         self.completed: List[Completion] = []
         self.kv_trace: List[List[int]] = []   # per-step live slot lengths
@@ -123,7 +163,8 @@ class Engine:
             logits, cache = lm.decode_step(params, cache, tokens, lengths,
                                            cfg, pages=tables)
             nxt = sampling.sample(logits, key, temperature=temps)
-            # idle slots stay parked at length 0 writing the trash page
+            # idle / mid-prefill slots stay parked at length 0 writing
+            # their private scratch page
             new_lengths = jnp.where(active, lengths + 1, 0)
             return nxt, new_lengths, cache
 
@@ -139,10 +180,27 @@ class Engine:
             last = last.at[slot, 0].set(first)
             return first, cache, lengths, last
 
+        def chunk_fn(params, cache, tokens, offset, chunk_len, slot,
+                     pages_row, lengths, last, temp, key):
+            logits, cache = lm.prefill_chunk(params, cache, tokens, cfg,
+                                             offset=offset,
+                                             chunk_len=chunk_len,
+                                             pages=pages_row[None])
+            tok = sampling.sample(logits, key, temperature=temp[None])[0]
+            # one program per chunk shape: every call samples and books
+            # the slot's length, but the host only *fetches* the token
+            # (and flips the slot active) on the final chunk — until
+            # then decode keeps the slot masked out and re-zeroes these
+            lengths = lengths.at[slot].set(offset + chunk_len)
+            last = last.at[slot, 0].set(tok)
+            return tok, cache, lengths, last
+
         # donate the cache: the pool update aliases in place instead of
-        # copying the whole (R, n_pages+1, ps, Hkv, hd) pools every step
+        # copying the whole (R, n_pages + n_slots, ps, Hkv, hd) pools
+        # every step
         self._step = jax.jit(step_fn, donate_argnums=(1,))
         self._admit = jax.jit(admit_fn, donate_argnums=(1,))
+        self._chunk = jax.jit(chunk_fn, donate_argnums=(1,))
 
     # ------------------------------------------------------------------
 
@@ -162,14 +220,16 @@ class Engine:
         self.queue.append((req, time.perf_counter()))
 
     def compile_counts(self) -> dict:
-        """Compiled-program counts of the two serving entry points —
+        """Compiled-program counts of the three serving entry points —
         jax's jit cache size when available (ground truth), else the
-        host-side proxy (distinct padded prefill lengths map 1:1 to
-        compiled admit programs; one decode program once any step ran)."""
+        host-side proxy (distinct padded prefill lengths / chunk panel
+        shapes map 1:1 to compiled programs; one decode program once any
+        step ran)."""
         def n(fn, fallback):
             return fn._cache_size() if hasattr(fn, "_cache_size") \
                 else fallback
         return {"prefill": n(self._admit, len(self._prefill_lens)),
+                "chunk": n(self._chunk, len(self._chunk_shapes)),
                 "step": n(self._step, int(self._stepped))}
 
     def _req_temp(self, req: Request) -> float:
@@ -179,7 +239,8 @@ class Engine:
     def _fill_slots(self) -> int:
         admitted = 0
         for slot in range(self.n_slots):
-            if self.active[slot] is not None or not self.queue:
+            if (self.active[slot] is not None or slot in self.chunking
+                    or not self.queue):
                 continue
             req, t0 = self.queue[0]   # t0: submission time (TTFT base)
             plen = int(req.prompt.shape[0])
@@ -191,6 +252,17 @@ class Engine:
             self.queue.popleft()
             admitted += 1
             self.pool.admit(slot, worst)
+            if self.prefill_chunk and plen > self.prefill_chunk:
+                # chunked prefill: reserve now, run the prompt as row
+                # panels across engine steps (_advance_chunks) — pages
+                # are charged per chunk, and admission itself costs no
+                # forward, so co-resident decode slots never stall on
+                # the monolithic largest-bucket program
+                self.chunking[slot] = _ChunkState(
+                    req=req, t0=t0, prompt=np.asarray(req.prompt),
+                    sched=chunk_schedule(plen, self.prefill_chunk,
+                                         self.buckets))
+                continue
             self.pool.ensure(slot, plen)
             bl = bucket_for(plen, self.buckets) if self.buckets else plen
             self._prefill_lens.add(bl)
@@ -202,50 +274,105 @@ class Engine:
                 jnp.asarray(padded), jnp.int32(slot),
                 jnp.asarray(self.pool.tables[slot]), jnp.int32(plen),
                 jnp.float32(self._req_temp(req)), sk)
-            self._temps = self._temps.at[slot].set(self._req_temp(req))
-            self.active[slot] = req
-            self.out_tokens[slot] = [int(first)]
-            self.started[slot] = t0
-            self.ttft[slot] = time.perf_counter() - t0
-            self._host_len[slot] = plen
-            # the prefill-sampled token can already finish the request
-            if self.out_tokens[slot][0] == self.eos_id or req.max_new <= 1:
-                self._retire(slot)
+            self._activate(slot, req, t0, int(first))
         return admitted
+
+    def _activate(self, slot, req, t0, first: int):
+        """A slot's prefill (one-shot or final chunk) produced its first
+        token: move it to decode, book TTFT, retire if already done."""
+        self._temps = self._temps.at[slot].set(self._req_temp(req))
+        self.active[slot] = req
+        self.out_tokens[slot] = [first]
+        self.started[slot] = t0
+        now = time.perf_counter()
+        self.ttft[slot] = now - t0
+        self._token_times[slot] = [now]
+        self._host_len[slot] = int(req.prompt.shape[0])
+        # the prefill-sampled token can already finish the request
+        if first == self.eos_id or req.max_new <= 1:
+            self._retire(slot)
+
+    def _advance_chunks(self) -> int:
+        """Advance every mid-prefill slot by one bounded row panel.
+        Returns the number of chunks processed (scheduling progress)."""
+        advanced = 0
+        for slot in sorted(self.chunking):
+            st = self.chunking[slot]
+            off, clen, shape = st.sched.pop(0)
+            self._chunk_shapes.add(shape)
+            self.pool.ensure(slot, off + clen)       # charged per chunk
+            padded = np.zeros((1, shape), np.int32)
+            padded[0, :clen] = st.prompt[off:off + clen]
+            self.key, sk = jax.random.split(self.key)
+            tok, self.cache, self.lengths, self._last = self._chunk(
+                self.params, self.cache, jnp.asarray(padded),
+                jnp.int32(off), jnp.int32(clen), jnp.int32(slot),
+                jnp.asarray(self.pool.tables[slot]),
+                self.lengths, self._last,
+                jnp.float32(self._req_temp(st.req)), sk)
+            advanced += 1
+            if not st.sched:
+                # final chunk: the ONLY chunk whose token the host
+                # fetches — intermediate chunks stay fully async
+                del self.chunking[slot]
+                self._activate(slot, st.req, st.t0, int(tok))
+        return advanced
 
     def _retire(self, slot):
         req = self.active[slot]
+        times = self._token_times[slot]
         self.completed.append(Completion(
             rid=req.rid, tokens=list(self.out_tokens[slot]),
             prompt_len=int(req.prompt.shape[0]),
             latency_s=time.perf_counter() - self.started[slot],
-            ttft_s=self.ttft[slot]))
+            ttft_s=self.ttft[slot],
+            itl_s=[b - a for a, b in zip(times, times[1:])]))
         self.pool.release(slot)
         self.active[slot] = None
         self.out_tokens[slot] = []
+        self._token_times[slot] = []
         self._host_len[slot] = 0
 
+    def _ship_tables(self):
+        """Mirror the block tables to the device when they changed.
+        Mid-prefill slots' rows are masked to their scratch page: the
+        lockstep decode step still writes a row for every slot, and the
+        real table already names live pages the next chunk will fill —
+        without the mask the decode write would land in them."""
+        key = (self.pool.version, frozenset(self.chunking))
+        if key == self._tables_key:
+            return
+        tables = self.pool.tables
+        if self.chunking:
+            tables = tables.copy()
+            for s in self.chunking:
+                tables[s, :] = self.pool.scratch[s]
+        self._tables_dev = jnp.asarray(tables)
+        self._tables_key = key
+
     def run(self, max_steps: int = 10_000) -> List[Completion]:
-        """Continuous-batching loop until queue + slots drain."""
+        """Continuous-batching loop until queue + slots drain. One
+        iteration = admissions + one chunk per mid-prefill slot + one
+        lockstep decode step."""
         steps = 0
         self.kv_trace = []           # fresh trace per run (bounded host mem)
-        while any(a is not None for a in self.active) or self.queue:
+        while (any(a is not None for a in self.active) or self.queue
+               or self.chunking):
             admitted = self._fill_slots()
+            chunked = self._advance_chunks()
             active = np.asarray([a is not None for a in self.active])
             if not active.any():
-                if self.queue and not admitted:
+                if self.queue and not admitted and not chunked:
                     raise RuntimeError(
                         "request needs more KV pages than the pool holds "
                         f"({self.pool.n_pages} x {self.page_size} tokens)")
-                if self.queue:
+                if self.queue or self.chunking:
                     continue         # everything admitted retired at once
                 break
             for slot in np.flatnonzero(active):
                 # cover the position this step writes (lazy tail alloc)
                 self.pool.ensure(int(slot), int(self._host_len[slot]) + 1)
-            if self.pool.version != self._tables_version:
-                self._tables_dev = jnp.asarray(self.pool.tables)
-                self._tables_version = self.pool.version
+            self._ship_tables()
             self.key, sk = jax.random.split(self.key)
             nxt, self.lengths, self.cache = self._step(
                 self.params, self.cache, self._last, self.lengths,
@@ -253,6 +380,7 @@ class Engine:
             self._last = nxt[:, None]
             self._stepped = True
             nxt_host = jax.device_get(nxt)  # the step's ONE device fetch
+            now = time.perf_counter()
             self._host_len[active] += 1
             self._host_len[~active] = 0
             self.kv_trace.append(
@@ -262,6 +390,7 @@ class Engine:
                 req = self.active[slot]
                 tok = int(nxt_host[slot])
                 self.out_tokens[slot].append(tok)
+                self._token_times[slot].append(now)
                 done = (tok == self.eos_id
                         or len(self.out_tokens[slot]) >= req.max_new
                         or int(self._host_len[slot]) >= self.max_len - 1)

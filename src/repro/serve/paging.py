@@ -9,7 +9,8 @@ module owns the mutable host state that fills those tables:
     the pool can cover its worst-case length (prompt + max_new, capped
     at max_len), so decode can allocate tail pages lazily and never
     deadlocks mid-sequence. Retiring a slot returns its pages to the
-    free list and points its table row back at the trash page.
+    free list and points its table row back at the slot's private
+    scratch page.
   * bucket policy — prompts are padded to a small static set of lengths
     (powers of two up to max_len) so continuous batching compiles
     O(n_buckets) prefill programs instead of O(unique prompt lengths).
@@ -42,6 +43,27 @@ def bucket_for(plen: int, buckets: List[int]) -> int:
                      f"{buckets[-1]}")
 
 
+def chunk_schedule(plen: int, chunk_size: int,
+                   buckets: List[int]) -> List[tuple]:
+    """Chunked-prefill schedule for a prompt of length ``plen``:
+    ``[(offset, chunk_len, padded_shape), ...]``.
+
+    Full chunks run at the ``chunk_size`` shape; the final partial chunk
+    pads to the smallest covering bucket — ``chunk_size`` sits on the
+    bucket ladder, so every chunk shape is a ladder entry at or below
+    it and mixed chunked/unchunked traffic compiles at most
+    ``n_buckets + n_chunk_shapes + 1`` programs (one-shot buckets +
+    chunk shapes + the decode step)."""
+    out, off = [], 0
+    while off < plen:
+        clen = min(chunk_size, plen - off)
+        shape = (chunk_size if clen == chunk_size
+                 else bucket_for(clen, buckets))
+        out.append((off, clen, shape))
+        off += clen
+    return out
+
+
 def supports_bucketing(cfg: ModelConfig) -> bool:
     """Tail-padding a prompt is exact only when every position's state
     is causal-attention KV: recurrent mixers (mamba/rwkv) fold the pad
@@ -70,18 +92,22 @@ def page_aligned_size(page_size: int, cfg: ModelConfig) -> int:
 class PagePool:
     """Free-list page allocator with per-slot block tables.
 
-    Physical ids 0..n_pages-1 are real pages; id ``n_pages`` is the
-    trash page every idle table entry points at (lockstep decode writes
-    from retired slots land there). ``tables`` is the host mirror the
-    engine ships to the device each time it changes.
+    Physical ids 0..n_pages-1 are real pages; ids ``n_pages + slot`` are
+    per-slot *scratch* pages idle table entries point at (lockstep
+    decode writes from retired or mid-prefill slots land there). Each
+    slot owns its scratch row, so idle-slot writes target disjoint
+    storage instead of serializing on one shared trash page — XLA can
+    overlap (or drop) them. ``tables`` is the host mirror the engine
+    ships to the device each time it changes.
     """
 
     def __init__(self, n_pages: int, page_size: int, n_slots: int,
                  max_pages: int):
         self.n_pages, self.page_size = n_pages, page_size
-        self.trash = n_pages
+        self.scratch = n_pages + np.arange(n_slots, dtype=np.int64)
         self.free: List[int] = list(range(n_pages - 1, -1, -1))
-        self.tables = np.full((n_slots, max_pages), self.trash, np.int32)
+        self.tables = np.repeat(self.scratch[:, None], max_pages,
+                                axis=1).astype(np.int32)
         self.n_alloc = np.zeros(n_slots, np.int64)
         self.reserved = np.zeros(n_slots, np.int64)
         self.version = 0              # bumped on any table change
@@ -110,10 +136,11 @@ class PagePool:
             self.version += 1
 
     def release(self, slot: int) -> None:
-        """Retire a slot: pages back to the free list, table to trash."""
+        """Retire a slot: pages back to the free list, table back to the
+        slot's scratch page."""
         n = int(self.n_alloc[slot])
         self.free.extend(int(p) for p in self.tables[slot, :n])
-        self.tables[slot, :] = self.trash
+        self.tables[slot, :] = self.scratch[slot]
         self.n_alloc[slot] = 0
         self.reserved[slot] = 0
         self.version += 1

@@ -1,8 +1,31 @@
+import os
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.models import lm
+
+try:
+    # CI property runs must be reproducible: a derandomized profile is
+    # registered and active by default, so every run replays the same
+    # example sequence (no flaky shrink chains, failures reproduce from
+    # the printed blob). Set HYPOTHESIS_PROFILE=dev locally to explore
+    # fresh random examples, or HYPOTHESIS_SEED=<n> to pin a specific
+    # non-derandomized draw sequence.
+    import random
+
+    from hypothesis import settings
+
+    _seed = os.environ.get("HYPOTHESIS_SEED")
+    settings.register_profile("ci", derandomize=_seed is None,
+                              deadline=None, print_blob=True)
+    settings.register_profile("dev", deadline=None)
+    if _seed is not None:
+        random.seed(int(_seed))      # hypothesis's entropy fallback
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
+except ImportError:                  # fast tier: no hypothesis installed
+    pass
 
 
 @pytest.fixture

@@ -5,7 +5,9 @@ attention primitive against the dense chunked oracle, and the modeled
 KV-traffic acceptance criterion. The slow tier drives the full engine:
 paged continuous batching must reproduce dense-cache greedy decoding
 token for token across mixed prompt lengths, sliding-window layers and
-slot reuse, while compiling at most ``n_buckets + 1`` programs.
+slot reuse, while compiling at most ``n_buckets + 1`` programs
+(``n_buckets + n_chunk_shapes + 1`` once chunked prefill is on —
+chunked-path parity itself lives in ``test_chunked_prefill.py``).
 """
 import jax
 import jax.numpy as jnp
@@ -32,7 +34,10 @@ from repro.serve.paging import (PagePool, bucket_for, default_buckets,
 
 def test_page_pool_alloc_release_reuse():
     pool = PagePool(n_pages=8, page_size=4, n_slots=2, max_pages=4)
-    assert pool.trash == 8 and (pool.tables == 8).all()
+    # idle tables point at each slot's PRIVATE scratch page (8, 9) —
+    # never at one shared page
+    assert list(pool.scratch) == [8, 9]
+    assert (pool.tables[0] == 8).all() and (pool.tables[1] == 9).all()
     assert pool.can_admit(16)            # 4 pages of 4 tokens
     pool.admit(0, 16)
     pool.ensure(0, 9)                    # 3 pages
@@ -47,7 +52,7 @@ def test_page_pool_alloc_release_reuse():
     granted = set(pool.tables[0, :3]) | set(pool.tables[1, :4])
     assert len(granted) == 7             # no page granted twice
     pool.release(0)
-    assert (pool.tables[0] == pool.trash).all()
+    assert (pool.tables[0] == pool.scratch[0]).all()
     assert pool.live_pages() == 4 and len(pool.free) == 4
     pool.admit(0, 16)
     pool.ensure(0, 16)                   # reuses the freed pages
@@ -147,6 +152,32 @@ def test_write_pages_appends_to_tail_page():
     assert bool(jnp.all(pool.k[0, 1] == 1.0))
     assert bool(jnp.all(pool.v[3, 2] == 2.0))
     assert float(jnp.abs(pool.k).sum()) == hkv * hd * b   # nothing else
+
+
+def test_idle_slot_writes_do_not_alias_one_page():
+    """DESIGN.md §4 follow-up (2) regression: idle slots write their own
+    scratch page, not one shared trash page — the lockstep writes land
+    in disjoint storage (XLA can overlap or drop them instead of
+    serializing), and no idle slot can observe another's garbage row."""
+    cfg = REDUCED["deepseek-7b"]()
+    key = jax.random.PRNGKey(0)
+    params, _ = lm.init_lm(key, cfg, dtype=jnp.float32)
+    eng = Engine(params, cfg, n_slots=3, max_len=32, eos_id=-1)
+    idle_rows = {tuple(set(eng.pool.tables[s])) for s in range(3)}
+    assert len(idle_rows) == 3            # pairwise distinct scratch ids
+    # device-level: two idle slots' lockstep writes land on their own
+    # scratch pages and nothing aliases
+    hkv, hd, ps = 2, 4, 4
+    pool = attention.PagedKVCache(k=jnp.zeros((4, ps, hkv, hd)),
+                                  v=jnp.zeros((4, ps, hkv, hd)))
+    tables = jnp.asarray([[2, 2], [3, 3]], jnp.int32)   # scratch = 2, 3
+    k_new = jnp.stack([jnp.full((1, hkv, hd), 1.0),
+                       jnp.full((1, hkv, hd), 5.0)])
+    pool = attention.write_pages(pool, k_new, k_new,
+                                 jnp.asarray([0, 0]), tables)
+    assert bool(jnp.all(pool.k[2, 0] == 1.0))
+    assert bool(jnp.all(pool.k[3, 0] == 5.0))
+    assert float(jnp.abs(pool.k[:2]).sum()) == 0.0      # real pages clean
 
 
 def test_write_pages_ring_wraps_window():
@@ -298,6 +329,42 @@ def test_engine_compile_stability():
     assert counts["prefill"] + counts["step"] <= len(eng.buckets) + 1
     # host-side proxy (distinct padded lengths) agrees with the jit cache
     assert counts["prefill"] == len(eng._prefill_lens)
+
+
+@pytest.mark.slow
+def test_compile_stability_mixed_chunked_traffic():
+    """The PR 3 bound extended to chunked prefill: mixed chunked /
+    unchunked traffic compiles at most n_buckets one-shot prefill
+    programs + n_chunk_shapes chunk programs + 1 decode program, with
+    the jit caches cross-checked against the host-side program
+    counters."""
+    cfg = REDUCED["deepseek-7b"]()
+    key = jax.random.PRNGKey(6)
+    params, _ = lm.init_lm(key, cfg, dtype=jnp.float32)
+    eng = Engine(params, cfg, n_slots=2, max_len=64, eos_id=-1,
+                 paging=PagingConfig(prefill_chunk=16))
+    assert eng.buckets == [16, 32, 64]
+    # spans: unchunked (<= chunk), chunk-divisible, non-divisible,
+    # plen == max_len, and repeats that must all hit compiled programs
+    for i, plen in enumerate([3, 16, 17, 21, 32, 40, 64, 5, 50, 33]):
+        eng.submit(Request(rid=i, prompt=jax.random.randint(
+            jax.random.fold_in(key, i), (plen,), 0, cfg.vocab),
+            max_new=4))
+    eng.run()
+    counts = eng.compile_counts()
+    n_chunk_shapes = len([b for b in eng.buckets
+                          if b <= eng.prefill_chunk])
+    assert 0 < counts["prefill"] <= len(eng.buckets)
+    assert 0 < counts["chunk"] <= n_chunk_shapes
+    assert counts["step"] == 1
+    assert (counts["prefill"] + counts["chunk"] + counts["step"]
+            <= len(eng.buckets) + n_chunk_shapes + 1)
+    # host-side program counters agree with the jit caches
+    assert counts["prefill"] == len(eng._prefill_lens)
+    assert counts["chunk"] == len(eng._chunk_shapes)
+    # every chunk shape sits on the bucket ladder at or below the chunk
+    assert all(s in eng.buckets and s <= eng.prefill_chunk
+               for s in eng._chunk_shapes)
 
 
 @pytest.mark.slow

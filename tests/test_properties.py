@@ -1,4 +1,6 @@
 """Property-based tests (hypothesis) on system invariants."""
+from collections import deque
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -14,6 +16,7 @@ from repro.core.quant import (dequantize, quantize_per_channel,
 from repro.core.rowwise import V5E, plan_matmul
 from repro.launch import hlo_cost
 from repro.optim import adamw
+from repro.serve.paging import PagePool
 
 dims = st.integers(min_value=1, max_value=4096)
 
@@ -90,6 +93,72 @@ def test_hlo_cost_scales_with_trip_count(trips):
     cost = hlo_cost.analyze_hlo(hlo)
     expect = 2 * 8 * 16 * 16 * trips
     assert abs(cost.flops - expect) / expect < 0.05
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.data())
+def test_page_pool_invariants(data):
+    """Random admit / extend / retire traffic against the serving page
+    allocator, driven exactly the way the engine drives it (reservation
+    check, FIFO head-only admission, lazy ensure within the
+    reservation). Invariants after every operation:
+
+      * conservation — free pages + live pages == total real pages;
+      * no page is ever granted twice (live table entries are distinct,
+        disjoint from the free list, and never a scratch page);
+      * deferral is FIFO — requests are admitted in submission order;
+      * a retired slot's table points back at its OWN scratch page.
+    """
+    n_slots = data.draw(st.integers(1, 4), label="n_slots")
+    page_size = data.draw(st.sampled_from([4, 8, 16]), label="page_size")
+    max_pages = data.draw(st.integers(1, 6), label="max_pages")
+    n_pages = data.draw(st.integers(1, n_slots * max_pages),
+                        label="n_pages")
+    pool = PagePool(n_pages, page_size, n_slots, max_pages)
+    max_len = max_pages * page_size
+    # scratch pages are per-slot, distinct, and outside the real range
+    assert sorted(pool.scratch) == list(range(n_pages, n_pages + n_slots))
+
+    queue: deque = deque()
+    live: dict = {}                       # slot -> (rid, reserved_tokens)
+    next_rid = 0
+    admitted = []
+    ops = data.draw(st.lists(
+        st.sampled_from(["submit", "admit", "extend", "retire"]),
+        min_size=1, max_size=60), label="ops")
+    for op in ops:
+        if op == "submit":
+            queue.append((next_rid, data.draw(st.integers(1, max_len))))
+            next_rid += 1
+        elif op == "admit":
+            free_slots = [s for s in range(n_slots) if s not in live]
+            if queue and free_slots:
+                rid, ln = queue[0]        # head only: FIFO, never skip
+                if pool.can_admit(ln):
+                    queue.popleft()
+                    slot = free_slots[0]
+                    pool.admit(slot, ln)
+                    pool.ensure(slot, data.draw(st.integers(1, ln)))
+                    live[slot] = (rid, ln)
+                    admitted.append(rid)
+        elif op == "extend" and live:
+            slot = data.draw(st.sampled_from(sorted(live)))
+            pool.ensure(slot, data.draw(st.integers(1, live[slot][1])))
+        elif op == "retire" and live:
+            slot = data.draw(st.sampled_from(sorted(live)))
+            pool.release(slot)
+            del live[slot]
+            assert (pool.tables[slot] == pool.scratch[slot]).all()
+        # conservation + no double allocation, after every op
+        assert len(pool.free) + pool.live_pages() == n_pages
+        granted = [int(p) for s in range(n_slots)
+                   for p in pool.tables[s, :pool.n_alloc[s]]]
+        assert len(granted) == len(set(granted))
+        assert set(granted).isdisjoint(pool.free)
+        assert all(p < n_pages for p in granted)
+    # FIFO: the admitted requests are exactly the first ones submitted,
+    # in order — deferral never reorders past the queue head
+    assert admitted == list(range(len(admitted)))
 
 
 @settings(max_examples=15, deadline=None)
