@@ -1,0 +1,65 @@
+"""CI gate for bench artifacts: fail if any JSON misses required keys.
+
+Each PR's bench writes a ``BENCH_PRn.json`` artifact; downstream
+sessions (and the README tables) read specific top-level sections from
+them. A bench refactor that silently drops a section would only show up
+when a later consumer breaks, so CI runs this checker after the bench
+loop: for every artifact it verifies the file exists, parses as JSON,
+and carries its required top-level keys.
+
+Usage: ``python benchmarks/check_bench.py [dir]`` (default: cwd).
+Exits non-zero listing every missing file/key.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+REQUIRED = {
+    "BENCH_PR2.json": ("traffic", "wall_us", "pallas_calls"),
+    "BENCH_PR3.json": ("throughput", "kv_traffic", "compiles", "config"),
+    "BENCH_PR4.json": ("weight_traffic", "jaxpr", "wall_us"),
+    "BENCH_PR5.json": ("off", "on", "p95_ttft_improves", "modeled",
+                       "config"),
+    "BENCH_PR6.json": ("parity", "scaling", "traffic", "compiles",
+                       "config"),
+}
+
+
+def check(directory: str = ".") -> list[str]:
+    problems = []
+    for name, keys in sorted(REQUIRED.items()):
+        path = os.path.join(directory, name)
+        if not os.path.exists(path):
+            problems.append(f"{name}: artifact missing")
+            continue
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            problems.append(f"{name}: unreadable ({e})")
+            continue
+        if not isinstance(data, dict):
+            problems.append(f"{name}: top level is {type(data).__name__},"
+                            " expected object")
+            continue
+        missing = [k for k in keys if k not in data]
+        if missing:
+            problems.append(f"{name}: missing keys {missing}")
+    return problems
+
+
+def main() -> int:
+    directory = sys.argv[1] if len(sys.argv) > 1 else "."
+    problems = check(directory)
+    if problems:
+        for p in problems:
+            print(f"check_bench: {p}", file=sys.stderr)
+        return 1
+    print(f"check_bench: {len(REQUIRED)} artifacts OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,11 +3,16 @@
 Prints ``name,us_per_call,derived`` CSV rows and writes the PR 2
 block-pipeline artifact (BENCH_PR2.json), the PR 3 paged-serving
 artifact (BENCH_PR3.json), the PR 4 decode weight-traffic artifact
-(BENCH_PR4.json) and the PR 5 chunked-prefill TTFT artifact
-(BENCH_PR5.json).
+(BENCH_PR4.json), the PR 5 chunked-prefill TTFT artifact
+(BENCH_PR5.json) and the PR 6 tensor-parallel artifact
+(BENCH_PR6.json — run as a subprocess: the emulated mesh needs
+XLA_FLAGS set before jax initialises, which has already happened in
+this process).
 """
 from __future__ import annotations
 
+import os
+import subprocess
 import sys
 
 
@@ -35,6 +40,12 @@ def main() -> None:
     decode_bench(emit, json_path="BENCH_PR4.json")
     chunked_prefill_bench(emit, json_path="BENCH_PR5.json")
     sys.stdout.flush()
+    tp = subprocess.run(
+        [sys.executable,
+         os.path.join(os.path.dirname(__file__), "tp_bench.py"),
+         "BENCH_PR6.json"])
+    if tp.returncode != 0:
+        raise SystemExit(tp.returncode)
 
 
 if __name__ == "__main__":

@@ -40,6 +40,7 @@ from repro.core.block_traffic import (chunked_prefill_traffic_cfg,
                                       serve_kv_traffic)
 from repro.core.types import PagingConfig
 from repro.models import lm
+from repro.serve import placement as placement_mod
 from repro.serve.engine import Engine, Request
 
 # mixed prompt lengths, mean ~18 tokens against max_len=128: the regime
@@ -49,12 +50,13 @@ PROMPT_LENS = [5, 9, 17, 33, 12, 47, 7, 24, 14, 40, 6, 20]
 
 def serve_bench(emit, json_path=None, *, n_slots: int = 4,
                 max_len: int = 128, page_size: int = 16,
-                max_new: int = 16):
+                max_new: int = 16, mesh_shape: str = ""):
     cfg = REDUCED["deepseek-7b"]()
     key = jax.random.PRNGKey(0)
     params, _ = lm.init_lm(key, cfg, dtype=jnp.float32)
     eng = Engine(params, cfg, n_slots=n_slots, max_len=max_len,
-                 eos_id=-1, paging=PagingConfig(page_size=page_size))
+                 eos_id=-1, paging=PagingConfig(page_size=page_size),
+                 placement=placement_mod.from_mesh_shape(mesh_shape))
     # warm-up: one request per bucket the trace touches + a decode step,
     # so the timed run measures serving, not XLA compilation
     from repro.serve.paging import bucket_for

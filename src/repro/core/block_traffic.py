@@ -315,6 +315,68 @@ def serve_kv_traffic(trace, cfg, *, n_slots: int, max_len: int,
             "ratio": ratio, "steps": len(trace)}
 
 
+# ----------------------------------------------------------------------
+# Tensor-parallel serving traffic: per-device KV + weight bytes under
+# head-/segment-sharding, with the cross-device all-reduce term (PR 6)
+# ----------------------------------------------------------------------
+
+
+def serve_tp_traffic(trace, cfg, *, n_slots: int, max_len: int,
+                     page_size: int, tp: int, dtype_bytes: int = 2) -> dict:
+    """Per-device modeled decode-loop bytes under tensor parallelism vs
+    the single-device engine, over a recorded ``Engine.kv_trace``.
+
+    Sharded per device (serve/placement.py):
+      * KV pages — pools shard on the KV-head axis, so each device's
+        block-table gathers stream ``1/tp`` of every step's KV bytes;
+      * block weights — wqkv / wgi column panels and the wo / down row
+        panels all split exactly ``1/tp`` (segment-wise permutation
+        keeps the splits on projection boundaries);
+      * an untied lm_head vocab-shards ``1/tp``; tied embeddings stay
+        replicated, so the unembed panel streams in FULL on every
+        device (reported honestly — it caps the ratio for tied archs).
+
+    Cross-device bytes added per step and device (ring collectives):
+      * one psum per attention output + one per MLP output — payload
+        ``n_slots x d_model`` activations, ring all-reduce moves
+        ``2 (tp-1)/tp`` x payload per device;
+      * untied logits all-gather: ``(tp-1)/tp x n_slots x padded_vocab``
+        fp32.
+
+    Returns {"single_bytes", "per_device_bytes", "kv_bytes",
+    "weight_bytes", "lm_head_bytes", "allreduce_bytes", "ratio", "tp",
+    "steps"} — ``ratio`` = single / per-device, the acceptance metric.
+    """
+    n_global, n_local, window = kv_layer_counts(cfg)
+    n_blocks = n_global + n_local
+    steps = len(trace)
+    kw = dict(n_global=n_global, n_local=n_local, window=window,
+              n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+              dtype_bytes=dtype_bytes)
+    kv = sum(paged_kv_step_bytes(lens, page_size=page_size, **kw)
+             for lens in trace)
+    block_w = decode_weight_traffic_cfg(
+        cfg, n_slots=n_slots, dtype_bytes=dtype_bytes)["weight_bytes"]
+    weights = n_blocks * block_w * steps
+    vp = -(-cfg.vocab // 256) * 256                # lm.padded_vocab
+    head_w = cfg.d_model * vp * dtype_bytes * steps
+    single = kv + weights + head_w
+
+    head_dev = head_w if cfg.tie_embeddings else head_w // tp
+    ar = 0
+    if tp > 1:
+        psum = n_slots * cfg.d_model * dtype_bytes
+        ar = 2 * n_blocks * (2 * (tp - 1) * psum // tp) * steps
+        if not cfg.tie_embeddings:
+            ar += (tp - 1) * n_slots * vp * FP32 // tp * steps
+    per_device = kv // tp + weights // tp + head_dev + ar
+    return {"single_bytes": single, "per_device_bytes": per_device,
+            "kv_bytes": kv, "weight_bytes": weights,
+            "lm_head_bytes": head_w, "allreduce_bytes": ar,
+            "ratio": single / per_device if per_device else 1.0,
+            "tp": tp, "steps": steps}
+
+
 def swin_t_stage_cases(batch: int = 1) -> dict:
     """The Swin-T (224x224) per-stage block geometries."""
     return {

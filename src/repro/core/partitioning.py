@@ -49,7 +49,44 @@ DEFAULT_RULES = {
     "conv": None,
 }
 
-_ACTIVE: dict = {"mesh": None, "rules": dict(DEFAULT_RULES)}
+_ACTIVE: dict = {"mesh": None, "rules": dict(DEFAULT_RULES),
+                 "tp_axis": None}
+
+
+# ----------------------------------------------------------------------
+# Tensor-parallel shard context (serving). Unlike the GSPMD mesh above,
+# this marks code being traced INSIDE a shard_map body whose params are
+# manually segment-/head-sharded over one mesh axis: every tensor the
+# model sees is the local shard, and the row-parallel output
+# projections (attention wo, MLP down) produce K-partial sums that the
+# layers finish with ``tp_reduce`` before adding bias/residual.
+# ``serve/placement.py`` activates it while tracing the engine's jitted
+# entry points; with no axis active every hook is a no-op, so the
+# single-device paths are untouched.
+# ----------------------------------------------------------------------
+
+
+@contextlib.contextmanager
+def tp_shard(axis: str):
+    prev = _ACTIVE["tp_axis"]
+    _ACTIVE["tp_axis"] = axis
+    try:
+        yield
+    finally:
+        _ACTIVE["tp_axis"] = prev
+
+
+def tp_axis() -> Optional[str]:
+    """The active tensor-parallel mesh axis, or None outside TP tracing."""
+    return _ACTIVE["tp_axis"]
+
+
+def tp_reduce(y):
+    """psum a K-partial matmul output over the TP axis (no-op without
+    one). Must run BEFORE any bias/residual add: folding those into a
+    partial shard's epilogue would multiply them by the shard count."""
+    ax = _ACTIVE["tp_axis"]
+    return jax.lax.psum(y, ax) if ax is not None else y
 
 
 def set_rules(overrides: dict) -> None:

@@ -3,6 +3,10 @@ requests.
 
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --smoke \
       --requests 8 --slots 4 --page-size 16
+
+Tensor-parallel serving (``--mesh-shape model=4``) needs the devices to
+exist before jax initialises; on a CPU box export
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` first.
 """
 from __future__ import annotations
 
@@ -16,6 +20,7 @@ from repro.configs import get_config, get_reduced
 from repro.core.block_traffic import serve_kv_traffic
 from repro.core.types import PagingConfig
 from repro.models import lm
+from repro.serve import placement as placement_mod
 from repro.serve.engine import Engine, Request
 
 
@@ -43,16 +48,24 @@ def main(argv=None):
                          "--prefill-chunk to drive chunked admissions")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh-shape", default="",
+                    help="tensor-parallel mesh, e.g. 'model=4' or '4' "
+                         "('' or '1' = single device). Head counts, "
+                         "d_ff and the padded vocab must divide by the "
+                         "mesh size; indivisible shapes are rejected at "
+                         "engine construction, not mid-step")
     args = ap.parse_args(argv)
 
     cfg = get_reduced(args.arch) if args.smoke else get_config(args.arch)
+    placement = placement_mod.from_mesh_shape(args.mesh_shape)
     key = jax.random.PRNGKey(args.seed)
     params, _ = lm.init_lm(key, cfg, dtype=jnp.float32)
     eng = Engine(params, cfg, n_slots=args.slots, max_len=args.max_len,
                  eos_id=-1, temperature=args.temperature, seed=args.seed,
                  paging=PagingConfig(page_size=args.page_size,
                                      n_pages=args.n_pages,
-                                     prefill_chunk=args.prefill_chunk))
+                                     prefill_chunk=args.prefill_chunk),
+                 placement=placement)
     for i in range(args.requests):
         plen = min(args.prompt_len + (i % 8), args.max_len)
         prompt = jax.random.randint(jax.random.fold_in(key, i),
@@ -63,7 +76,8 @@ def main(argv=None):
     dt = time.time() - t0
     total_new = sum(len(c.tokens) for c in done)
     print(f"arch={cfg.name} slots={args.slots} requests={len(done)} "
-          f"page_size={eng.page_size} pool={eng.pool.n_pages} pages")
+          f"page_size={eng.page_size} pool={eng.pool.n_pages} pages "
+          f"placement={placement.describe()}")
     for c in sorted(done, key=lambda c: c.rid)[:4]:
         print(f"  rid={c.rid} prompt_len={c.prompt_len} "
               f"tokens={c.tokens[:8]}... latency={c.latency_s*1e3:.0f}ms "

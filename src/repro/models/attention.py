@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.core import runtime
 from repro.core import compat
+from repro.core import partitioning as part
 from repro.core.partitioning import logical_constraint
 from repro.core.types import ModelConfig
 from repro.kernels import ops
@@ -73,6 +74,19 @@ def init(key, cfg: ModelConfig, stack: Optional[int], dtype,
         specs = {"wqkv": llead + ("embed", "qkv"),
                  "wo": llead + ("qkv", "embed")}
     return params, specs
+
+
+def _out_proj(out, wo, residual):
+    """Output projection, TP-aware (serve/placement.py). Under a
+    tensor-parallel shard context ``wo`` is row-sharded (each shard
+    holds the head group it attended), so the matmul yields a K-partial
+    sum that must psum over the TP axis BEFORE the residual rides on —
+    a residual folded into the kernel epilogue would be summed once per
+    shard. Outside TP this is exactly the fused epilogue path."""
+    if part.tp_axis() is None:
+        return ops.matmul(out, wo, residual=residual)
+    y = part.tp_reduce(ops.matmul(out, wo))
+    return y if residual is None else y + residual
 
 
 class KVCache(NamedTuple):
@@ -455,7 +469,7 @@ def apply(params, x, *, cfg: ModelConfig, positions, window: int = 0,
     qh = logical_constraint(qh, "batch", "heads", "seq", None)
     out = _sdpa(qh, kh, vh, causal=causal, window=window)
     out = out.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
-    return ops.matmul(out, params["wo"], residual=residual), (k, v)
+    return _out_proj(out, params["wo"], residual), (k, v)
 
 
 def write_cache(cache: KVCache, k_new, v_new, pos, window: int = 0):
@@ -627,7 +641,7 @@ def paged_chunk_apply(params, x, pool: PagedKVCache, *, cfg: ModelConfig,
     pool = write_chunk_pages(pool, k, v, offset, chunk_len, pages,
                              window)
     out = out.transpose(0, 2, 1, 3).reshape(b, sc, hq * hd)
-    return ops.matmul(out, params["wo"], residual=residual), pool
+    return _out_proj(out, params["wo"], residual), pool
 
 
 def paged_decode_apply(params, x, pool: PagedKVCache, *, cfg: ModelConfig,
@@ -657,7 +671,7 @@ def paged_decode_apply(params, x, pool: PagedKVCache, *, cfg: ModelConfig,
     out = chunked_attention(qh, pool.k, pool.v, causal=False, window=0,
                             kv_len=kv_len, pages=tbl)
     out = out.reshape(b, 1, hq * hd)
-    return ops.matmul(out, params["wo"], residual=residual), pool
+    return _out_proj(out, params["wo"], residual), pool
 
 
 def decode_apply(params, x, cache: KVCache, *, cfg: ModelConfig,
@@ -705,7 +719,7 @@ def decode_apply(params, x, cache: KVCache, *, cfg: ModelConfig,
     out = chunked_attention(qh, kh, vh, causal=False, window=0,
                             q_offset=0, kv_len=kv_len)
     out = out.reshape(b, 1, hq * hd)
-    return ops.matmul(out, params["wo"], residual=residual), cache
+    return _out_proj(out, params["wo"], residual), cache
 
 
 def _decode_seq_sharded(q, k_new, v_new, cache: KVCache, lengths, *,

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import quant
+from repro.core import partitioning as part
 from repro.core.partitioning import logical_constraint
 from repro.core.types import ModelConfig, Stage
 from repro.kernels import ops
@@ -278,11 +279,22 @@ def embed(params, tokens, cfg: ModelConfig, extra: Optional[dict] = None):
 def unembed(params, x, cfg: ModelConfig):
     x = ops.layernorm(x, params["final_norm"]["g"],
                       params["final_norm"].get("b"), kind=cfg.norm)
+    tp = part.tp_axis()
     if cfg.tie_embeddings:
+        # tied embeddings stay replicated under TP (the embed gather
+        # needs every row anyway), so the logits are already full-width
         w = quant.resolve_weight(params["embed"], x.dtype).T
+        logits = ops.matmul(x, w, out_dtype=jnp.float32)
+    elif tp is not None:
+        # vocab-sharded lm_head: each shard computes its contiguous
+        # logit block exactly (pure N-split, bitwise identical columns),
+        # then a tiled all-gather rebuilds the full row — the pad mask
+        # below must see GLOBAL column indices, hence gather-first
+        logits = jax.lax.all_gather(
+            ops.matmul(x, params["lm_head"], out_dtype=jnp.float32),
+            tp, axis=x.ndim - 1, tiled=True)
     else:
-        w = params["lm_head"]
-    logits = ops.matmul(x, w, out_dtype=jnp.float32)
+        logits = ops.matmul(x, params["lm_head"], out_dtype=jnp.float32)
     vp = padded_vocab(cfg)
     if vp != cfg.vocab:  # mask pad columns out of the softmax
         col = jax.lax.broadcasted_iota(jnp.int32, logits.shape,

@@ -11,6 +11,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import partitioning as part
 from repro.core.types import GATED_ACTS as GATED, ModelConfig
 from repro.kernels import ops
 
@@ -63,7 +64,12 @@ def apply(params, x, *, cfg: ModelConfig, norm=None, residual=None):
             h = ops.matmul(x, wgi[..., f:]) * g
     else:
         h = ops.matmul(x, params["wi"], activation=act, norm=norm)
-    return ops.matmul(h, params["wo"], residual=residual)
+    if part.tp_axis() is None:
+        return ops.matmul(h, params["wo"], residual=residual)
+    # TP serving: wo is row-sharded over the hidden dim — psum the
+    # partial product over the mesh axis before the residual rides on
+    y = part.tp_reduce(ops.matmul(h, params["wo"]))
+    return y if residual is None else y + residual
 
 
 # ---------------------------- RWKV channel-mix -------------------------

@@ -41,6 +41,7 @@ from repro.core import quant
 from repro.core.types import ModelConfig, PagingConfig
 from repro.models import lm
 from repro.serve import sampling
+from repro.serve.placement import CACHE, PARAMS, REP, SingleDevice
 from repro.serve.paging import (PagePool, bucket_for, chunk_schedule,
                                 default_buckets, page_aligned_size,
                                 supports_bucketing)
@@ -85,8 +86,15 @@ class Engine:
                  temperature: float = 0.0, seed: int = 0,
                  paging: PagingConfig = PagingConfig(),
                  buckets: Optional[List[int]] = None,
-                 cache_dtype=None):
-        self.params, self.cfg = params, cfg
+                 cache_dtype=None, placement=None):
+        self.placement = placement or SingleDevice()
+        # fail at construction, never mid-step: an indivisible mesh axis
+        # would otherwise surface as an XLA shape crash deep in a jit
+        self.placement.validate(cfg)
+        self.cfg = cfg
+        # the config the jitted model code traces against: per-shard
+        # heads/d_ff under tensor parallelism, cfg itself on one device
+        rcfg = self.placement.compute_cfg(cfg)
         self.n_slots, self.max_len, self.eos_id = n_slots, max_len, eos_id
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
@@ -107,9 +115,11 @@ class Engine:
         else:
             dtype = jnp.result_type(params["embed"])
         self.cache_dtype = dtype
-        self.cache = lm.init_paged_cache(cfg, n_slots, max_len,
-                                         page_size=ps, n_pages=n_pages,
-                                         dtype=dtype)
+        # placement owns where params and pools live (sharded under TP)
+        self.params = self.placement.prepare_params(params, cfg)
+        self.cache = self.placement.prepare_cache(
+            lm.init_paged_cache(cfg, n_slots, max_len, page_size=ps,
+                                n_pages=n_pages, dtype=dtype))
         if buckets is not None:
             if not supports_bucketing(cfg):
                 raise ValueError(
@@ -139,11 +149,14 @@ class Engine:
                     f"bucket ladder {self.buckets} (chunk shapes reuse "
                     "the ladder to bound the compile count)")
 
-        self.lengths = jnp.zeros((n_slots,), jnp.int32)
+        # recurring jit operands are committed through the placement so
+        # their sharding signature never flips host->mesh mid-run
+        put = self.placement.put_rep
+        self.lengths = put(jnp.zeros((n_slots,), jnp.int32))
         self._host_len = np.zeros((n_slots,), np.int64)
-        self._last = jnp.zeros((n_slots, 1), jnp.int32)
-        self._temps = jnp.zeros((n_slots,), jnp.float32)
-        self._tables_dev = jnp.asarray(self.pool.tables)
+        self._last = put(jnp.zeros((n_slots, 1), jnp.int32))
+        self._temps = put(jnp.zeros((n_slots,), jnp.float32))
+        self._tables_dev = put(jnp.asarray(self.pool.tables))
         self._tables_key = (self.pool.version, frozenset())
         self.active: List[Optional[Request]] = [None] * n_slots
         self.chunking: Dict[int, _ChunkState] = {}   # slot -> progress
@@ -161,7 +174,7 @@ class Engine:
         def step_fn(params, cache, tokens, lengths, tables, temps, active,
                     key):
             logits, cache = lm.decode_step(params, cache, tokens, lengths,
-                                           cfg, pages=tables)
+                                           rcfg, pages=tables)
             nxt = sampling.sample(logits, key, temperature=temps)
             # idle / mid-prefill slots stay parked at length 0 writing
             # their private scratch page
@@ -170,9 +183,9 @@ class Engine:
 
         def admit_fn(params, cache, lengths, last, tokens, slot, pages_row,
                      plen, temp, key):
-            logits, states = lm.prefill_states(params, tokens, cfg,
+            logits, states = lm.prefill_states(params, tokens, rcfg,
                                                last_pos=plen[None])
-            cache = lm.insert_prefill(cfg, cache, states, slot=slot,
+            cache = lm.insert_prefill(rcfg, cache, states, slot=slot,
                                       pages=pages_row, plen=plen,
                                       page_size=ps)
             first = sampling.sample(logits, key, temperature=temp[None])[0]
@@ -182,7 +195,7 @@ class Engine:
 
         def chunk_fn(params, cache, tokens, offset, chunk_len, slot,
                      pages_row, lengths, last, temp, key):
-            logits, cache = lm.prefill_chunk(params, cache, tokens, cfg,
+            logits, cache = lm.prefill_chunk(params, cache, tokens, rcfg,
                                              offset=offset,
                                              chunk_len=chunk_len,
                                              pages=pages_row[None])
@@ -197,10 +210,17 @@ class Engine:
 
         # donate the cache: the pool update aliases in place instead of
         # copying the whole (R, n_pages + n_slots, ps, Hkv, hd) pools
-        # every step
-        self._step = jax.jit(step_fn, donate_argnums=(1,))
-        self._admit = jax.jit(admit_fn, donate_argnums=(1,))
-        self._chunk = jax.jit(chunk_fn, donate_argnums=(1,))
+        # every step. Placement owns the jit: under TP the entry points
+        # run in shard_map over the mesh, host operands replicated.
+        self._step = self.placement.jit(
+            step_fn, kinds=(PARAMS, CACHE) + (REP,) * 6,
+            out_kinds=(REP, REP, CACHE), donate=(1,))
+        self._admit = self.placement.jit(
+            admit_fn, kinds=(PARAMS, CACHE) + (REP,) * 8,
+            out_kinds=(REP, CACHE, REP, REP), donate=(1,))
+        self._chunk = self.placement.jit(
+            chunk_fn, kinds=(PARAMS, CACHE) + (REP,) * 9,
+            out_kinds=(REP, CACHE, REP, REP), donate=(1,))
 
     # ------------------------------------------------------------------
 
@@ -347,7 +367,7 @@ class Engine:
             tables = tables.copy()
             for s in self.chunking:
                 tables[s, :] = self.pool.scratch[s]
-        self._tables_dev = jnp.asarray(tables)
+        self._tables_dev = self.placement.put_rep(jnp.asarray(tables))
         self._tables_key = key
 
     def run(self, max_steps: int = 10_000) -> List[Completion]:
