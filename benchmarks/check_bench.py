@@ -24,6 +24,8 @@ REQUIRED = {
                        "config"),
     "BENCH_PR6.json": ("parity", "scaling", "traffic", "compiles",
                        "config"),
+    "BENCH_PR7.json": ("goodput", "preemptions", "recompute", "statuses",
+                       "config"),
 }
 
 

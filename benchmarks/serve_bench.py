@@ -1,4 +1,11 @@
-"""PR 3 + PR 5 serving benches: paged-KV engine traces.
+"""PR 3 + PR 5 + PR 7 serving benches: paged-KV engine traces.
+
+``preemption_bench`` (PR 7) prices fault-tolerant scheduling: a pool
+sized below the trace's worst-case demand forces pool-pressure
+preemption (youngest slot evicted, pages rolled back, request requeued
+with its produced tokens). Writes ``BENCH_PR7.json`` — goodput
+(ok-completions/s) vs an unpressured reference pool, preemption count,
+and recompute overhead tokens.
 
 ``serve_bench`` (PR 3) emits ``bench.serve.*`` CSV rows and writes
 ``BENCH_PR3.json`` (uploaded as a CI artifact) with three sections:
@@ -210,9 +217,95 @@ def chunked_prefill_bench(emit, json_path=None, *, n_slots: int = 4,
     return result
 
 
+def preemption_bench(emit, json_path=None, *, n_slots: int = 4,
+                     max_len: int = 128, page_size: int = 16,
+                     n_requests: int = 6, prompt_len: int = 32,
+                     max_new: int = 16, n_pages: int = 0,
+                     patience: int = 3):
+    """PR 7: goodput under preemption pressure. The pool is sized below
+    the trace's worst-case demand (default: half of what ``n_requests``
+    want at once), so the queue head starves behind live residents and
+    pool-pressure preemption (``preempt_patience``) must evict the
+    youngest slot — pages roll back, the victim re-enqueues with its
+    produced tokens and recomputes through the ordinary prefill path.
+    Reports goodput (ok-completions/s), the preemption count and the
+    recompute overhead in tokens; asserts at least one preemption fired
+    and every request still finished ``ok``."""
+    cfg = REDUCED["deepseek-7b"]()
+    key = jax.random.PRNGKey(0)
+    params, _ = lm.init_lm(key, cfg, dtype=jnp.float32)
+    worst = min(max_len, prompt_len + max_new - 1)
+    pages_per_req = -(-worst // page_size)
+    n_pages = n_pages or 2 * pages_per_req      # two residents at a time
+    prompts = [jax.random.randint(jax.random.fold_in(key, i),
+                                  (prompt_len,), 0, cfg.vocab)
+               for i in range(n_requests)]
+
+    def drive(pool_pages, pat):
+        eng = Engine(params, cfg, n_slots=n_slots, max_len=max_len,
+                     eos_id=-1,
+                     paging=PagingConfig(page_size=page_size,
+                                         n_pages=pool_pages),
+                     preempt_patience=pat)
+        # warm-up on the single bucket + decode program
+        eng.submit(Request(rid=-1, prompt=prompts[0], max_new=2))
+        eng.run()
+        eng.completed.clear()
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new=max_new))
+        t0 = time.perf_counter()
+        done = eng.run()
+        wall = time.perf_counter() - t0
+        ok = [c for c in done if c.status in ("ok", "eos", "length")]
+        return eng, done, wall, ok
+
+    eng, done, wall, ok = drive(n_pages, patience)
+    assert eng.stats["preemptions"] >= 1, (
+        "preemption pressure trace fired no preemptions: "
+        f"pool={n_pages} pages, stats={eng.stats}")
+    assert len(ok) == n_requests, [(c.rid, c.status) for c in done]
+    # reference: the same trace on a full-occupancy pool (no pressure)
+    ref_eng, _, ref_wall, ref_ok = drive(0, None)
+    assert ref_eng.stats["preemptions"] == 0
+
+    decoded = sum(len(c.tokens) for c in ok)
+    result = {
+        "goodput": {"ok_completions_per_s": len(ok) / wall,
+                    "ok_completions": len(ok),
+                    "decoded_tokens": decoded, "wall_s": wall,
+                    "reference_ok_per_s": len(ref_ok) / ref_wall,
+                    "reference_wall_s": ref_wall},
+        "preemptions": eng.stats["preemptions"],
+        "recompute": {"tokens": eng.stats["recompute_tokens"],
+                      "overhead_per_decoded":
+                          eng.stats["recompute_tokens"] / max(decoded, 1)},
+        "statuses": {s: sum(1 for c in done if c.status == s)
+                     for s in {c.status for c in done}},
+        "config": {"arch": cfg.name, "n_slots": n_slots,
+                   "max_len": max_len, "page_size": page_size,
+                   "n_pages": n_pages, "n_requests": n_requests,
+                   "prompt_len": prompt_len, "max_new": max_new,
+                   "preempt_patience": patience},
+    }
+    emit("bench.serve.preempt.goodput", wall / max(len(ok), 1) * 1e6,
+         f"{result['goodput']['ok_completions_per_s']:.2f} ok/s under "
+         f"pressure vs {result['goodput']['reference_ok_per_s']:.2f} "
+         f"unpressured ({n_pages} vs full pool pages)")
+    emit("bench.serve.preempt.recompute", 0,
+         f"{eng.stats['preemptions']} preemptions, "
+         f"{eng.stats['recompute_tokens']} recomputed tokens "
+         f"({result['recompute']['overhead_per_decoded']:.2f} per "
+         "decoded)")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(result, f, indent=2)
+    return result
+
+
 def main():
     json_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_PR3.json"
     json_path5 = sys.argv[2] if len(sys.argv) > 2 else "BENCH_PR5.json"
+    json_path7 = sys.argv[3] if len(sys.argv) > 3 else "BENCH_PR7.json"
 
     def emit(name, us, derived):
         print(f"{name},{us:.1f},{derived}")
@@ -221,6 +314,8 @@ def main():
     print(f"wrote {json_path}")
     chunked_prefill_bench(emit, json_path=json_path5)
     print(f"wrote {json_path5}")
+    preemption_bench(emit, json_path=json_path7)
+    print(f"wrote {json_path7}")
 
 
 if __name__ == "__main__":

@@ -82,6 +82,12 @@ class PagingConfig:
     n_pages: int = 0               # real pages per layer pool (0 => full)
     min_bucket: int = 16           # smallest prefill padding bucket
     prefill_chunk: int = 0         # chunked-prefill panel size (0 => off)
+    # Slice the decode block table to the batch's max live pages,
+    # rounded up to a power of two, so executed gather volume tracks
+    # live-page traffic instead of always reading max_pages entries.
+    # Costs up to log2(max_pages) extra compiled decode programs (one
+    # per table width), so it is opt-in.
+    table_width_bucketing: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

@@ -20,6 +20,7 @@ from repro.configs import get_config, get_reduced
 from repro.core.block_traffic import serve_kv_traffic
 from repro.core.types import PagingConfig
 from repro.models import lm
+from repro.serve import faults as faults_mod
 from repro.serve import placement as placement_mod
 from repro.serve.engine import Engine, Request
 
@@ -48,6 +49,21 @@ def main(argv=None):
                          "--prefill-chunk to drive chunked admissions")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fault-plan", default="",
+                    help="deterministic chaos schedule, e.g. "
+                         "'alloc@3,nan@5.1,exc@7,slow@2:0.01' "
+                         "(kind@clock[.slot][:arg]); or 'random:SEED' "
+                         "for a seeded random plan. The engine recovers "
+                         "and every request still reaches a terminal "
+                         "completion — this flag exists to demo that")
+    ap.add_argument("--preempt-patience", type=int, default=None,
+                    help="preempt the youngest slot after this many "
+                         "consecutive iterations with the queue head "
+                         "blocked on pages (default: off; deadline-"
+                         "priority preemption is always on)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request deadline in seconds (requests "
+                         "past it retire with status 'deadline')")
     ap.add_argument("--mesh-shape", default="",
                     help="tensor-parallel mesh, e.g. 'model=4' or '4' "
                          "('' or '1' = single device). Head counts, "
@@ -58,6 +74,12 @@ def main(argv=None):
 
     cfg = get_reduced(args.arch) if args.smoke else get_config(args.arch)
     placement = placement_mod.from_mesh_shape(args.mesh_shape)
+    if args.fault_plan.startswith("random:"):
+        plan = faults_mod.FaultPlan.random(
+            int(args.fault_plan.split(":", 1)[1]), n_steps=64,
+            n_slots=args.slots, p_alloc=0.1, p_nan=0.05, p_exc=0.02)
+    else:
+        plan = faults_mod.parse_plan(args.fault_plan)
     key = jax.random.PRNGKey(args.seed)
     params, _ = lm.init_lm(key, cfg, dtype=jnp.float32)
     eng = Engine(params, cfg, n_slots=args.slots, max_len=args.max_len,
@@ -65,12 +87,14 @@ def main(argv=None):
                  paging=PagingConfig(page_size=args.page_size,
                                      n_pages=args.n_pages,
                                      prefill_chunk=args.prefill_chunk),
-                 placement=placement)
+                 placement=placement, faults=plan,
+                 preempt_patience=args.preempt_patience)
     for i in range(args.requests):
         plen = min(args.prompt_len + (i % 8), args.max_len)
         prompt = jax.random.randint(jax.random.fold_in(key, i),
                                     (plen,), 0, cfg.vocab)
-        eng.submit(Request(rid=i, prompt=prompt, max_new=args.max_new))
+        eng.submit(Request(rid=i, prompt=prompt, max_new=args.max_new,
+                           deadline_s=args.deadline))
     t0 = time.time()
     done = eng.run()
     dt = time.time() - t0
@@ -79,11 +103,16 @@ def main(argv=None):
           f"page_size={eng.page_size} pool={eng.pool.n_pages} pages "
           f"placement={placement.describe()}")
     for c in sorted(done, key=lambda c: c.rid)[:4]:
-        print(f"  rid={c.rid} prompt_len={c.prompt_len} "
+        print(f"  rid={c.rid} status={c.status} prompt_len={c.prompt_len} "
               f"tokens={c.tokens[:8]}... latency={c.latency_s*1e3:.0f}ms "
               f"ttft={c.ttft_s*1e3:.0f}ms")
+    by_status: dict = {}
+    for c in done:
+        by_status[c.status] = by_status.get(c.status, 0) + 1
     print(f"decoded {total_new} tokens in {dt:.2f}s "
           f"({total_new/dt:.1f} tok/s with continuous batching)")
+    print(f"statuses: {by_status}  faults: {plan.describe()}  "
+          f"stats: {eng.stats}")
     traffic = serve_kv_traffic(eng.kv_trace, cfg, n_slots=args.slots,
                                max_len=args.max_len,
                                page_size=eng.page_size)

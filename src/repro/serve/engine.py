@@ -8,7 +8,8 @@ its prompt needs, so short sequences never pay ``max_len`` attention
 traffic. All host <-> device choreography is compile-stable:
 
   * decode is ONE jitted program — block tables, lengths, per-slot
-    temperatures and the active mask are traced operands;
+    temperatures, the active mask and the fault-injection poison mask
+    are traced operands;
   * prefill pads prompts to a static bucket ladder (powers of two up to
     ``max_len``) and fuses the prefill forward, the paged cache insert
     and first-token sampling into one jitted program per bucket, so
@@ -17,14 +18,60 @@ traffic. All host <-> device choreography is compile-stable:
     at exact lengths — see ``paging.supports_bucketing``);
   * with ``paging.prefill_chunk`` set, prompts longer than the chunk
     *chunk-prefill*: each engine step advances every mid-prefill slot by
-    one bounded row panel (``lm.prefill_chunk`` — prefix-page attention
-    + positioned KV append), interleaved with the decode step, so the
-    largest bucket's monolithic program never stalls co-resident decode
-    slots (the TTFT cliff). Only the final chunk's sampled token is
-    fetched; chunk shapes stay on the bucket ladder, so the compile
+    one bounded row panel (``lm.prefill_chunk``), interleaved with the
+    decode step; chunk shapes stay on the bucket ladder, so the compile
     count is bounded by ``n_buckets + n_chunk_shapes + 1``;
+  * with ``paging.table_width_bucketing`` set, the decode block table is
+    sliced to the batch's max live pages rounded up to a power of two,
+    so executed gather volume tracks live-page traffic — at the cost of
+    up to ``log2(max_pages)`` extra compiled decode programs;
   * the decode loop fetches exactly one device value per step (the
-    sampled tokens); sequence lengths are mirrored on the host.
+    sampled tokens plus their finite-ness flags, in one transfer);
+    sequence lengths are mirrored on the host.
+
+On top of that sits the **request lifecycle and fault-tolerance layer**
+(DESIGN.md §7). Every submitted rid is guaranteed exactly one terminal
+:class:`Completion` whose ``status`` says how it ended:
+
+  ``ok``       hit its ``max_new`` budget
+  ``eos``      sampled the EOS token
+  ``length``   hit the engine's ``max_len`` KV cap
+  ``deadline`` exceeded its ``Request.deadline_s`` (queued or running)
+  ``cancelled`` :meth:`Engine.cancel` was called on it
+  ``preempted_requeued``  returned unfinished (``run`` hit ``max_steps``
+               or :meth:`Engine.shutdown` drained the engine); carries
+               the tokens produced so far and may be resubmitted
+  ``failed``   quarantined (NaN/inf logits), unserviceable on this pool,
+               or gave up after repeated faults
+
+The machinery behind the guarantee:
+
+  * **Transactional admission** — every multi-page mutation of
+    :class:`~repro.serve.paging.PagePool` (admit+ensure, chunk growth,
+    decode tail allocation) runs inside ``begin``/``commit``/
+    ``rollback``, so an allocation failure mid-admission restores the
+    exact prior allocator state instead of leaking half an admission.
+  * **Preemption** — when a deadlined queue head is blocked behind
+    deadline-free (or laxer) residents, the youngest such slot is
+    preempted: its pages roll back to the free list and the request
+    re-enqueues *with the tokens it already produced*; re-admission
+    replays ``prompt + tokens[:-1]`` through the ordinary (chunked)
+    prefill path and greedily re-derives the last token, so the resumed
+    greedy stream is bit-identical to the unpreempted one. Pure
+    pool-pressure preemption is opt-in via ``preempt_patience``.
+  * **Recovery boundary** — the decode cache is donated, so a mid-step
+    exception invalidates it; ``run`` catches step/admit/chunk failures,
+    rebuilds device state (fresh paged cache, zeroed host mirrors) and
+    replays every live request from its host-side record. A request
+    that keeps failing retires as ``failed`` instead of looping.
+  * **NaN quarantine** — the decode step computes per-slot finite-ness
+    of the logits *inside the jit* (fetched with the sampled tokens in
+    the same transfer); a poisoned slot retires as ``failed`` instead of
+    corrupting the lockstep batch. With no poisoning the guard is
+    bitwise inert.
+  * **Fault injection** — a seeded :class:`~repro.serve.faults.FaultPlan`
+    drives all of the above deterministically, keyed on ``Engine.clock``
+    (one tick per run-loop iteration, monotonic across ``run`` calls).
 """
 from __future__ import annotations
 
@@ -41,10 +88,14 @@ from repro.core import quant
 from repro.core.types import ModelConfig, PagingConfig
 from repro.models import lm
 from repro.serve import sampling
+from repro.serve.faults import AllocFault, FaultPlan, StepFault
 from repro.serve.placement import CACHE, PARAMS, REP, SingleDevice
 from repro.serve.paging import (PagePool, bucket_for, chunk_schedule,
                                 default_buckets, page_aligned_size,
                                 supports_bucketing)
+
+TERMINAL_STATUSES = ("ok", "eos", "length", "deadline", "cancelled",
+                     "preempted_requeued", "failed")
 
 
 @dataclasses.dataclass
@@ -53,7 +104,9 @@ class Request:
     prompt: jnp.ndarray              # (S,) int32
     max_new: int = 32
     temperature: Optional[float] = None   # None => engine default
-
+    deadline_s: Optional[float] = None    # seconds after submission by
+    #                                  which the request must finish;
+    #                                  None => no deadline
 
 @dataclasses.dataclass
 class Completion:
@@ -68,14 +121,31 @@ class Completion:
     #                                  entries): the stall a co-resident
     #                                  prefill admission injects shows up
     #                                  here as a latency spike
+    status: str = "ok"               # terminal status, one of
+    #                                  TERMINAL_STATUSES
+
+
+@dataclasses.dataclass
+class _Pending:
+    """A queued unit of work: a fresh request, or a preempted/recovered
+    one carrying the tokens it already produced. Re-admission replays
+    ``prompt + prior[:-1]`` through the ordinary prefill path and the
+    prefill sample re-derives ``prior[-1]`` (bit-identical under
+    greedy), so resume needs no special device machinery."""
+    req: Request
+    t0: float                        # submission wall time (TTFT base)
+    prior: List[int] = dataclasses.field(default_factory=list)
+    prior_times: List[float] = dataclasses.field(default_factory=list)
+    ttft: Optional[float] = None     # preserved across preemption: the
+    #                                  first token was already delivered
+    finished: bool = False           # exactly-once terminal guard
 
 
 @dataclasses.dataclass
 class _ChunkState:
     """Per-slot chunked-prefill progress (host side)."""
-    req: Request
-    t0: float                        # submission wall time (TTFT base)
-    prompt: np.ndarray               # (S,) int32 host copy
+    pend: _Pending
+    prompt: np.ndarray               # (S,) int32 effective prompt
     sched: List[tuple]               # remaining (offset, len, shape)
     #                                  panels (paging.chunk_schedule)
 
@@ -86,7 +156,10 @@ class Engine:
                  temperature: float = 0.0, seed: int = 0,
                  paging: PagingConfig = PagingConfig(),
                  buckets: Optional[List[int]] = None,
-                 cache_dtype=None, placement=None):
+                 cache_dtype=None, placement=None,
+                 faults: Optional[FaultPlan] = None,
+                 preempt_patience: Optional[int] = None,
+                 max_recoveries: int = 8, max_rid_failures: int = 3):
         self.placement = placement or SingleDevice()
         # fail at construction, never mid-step: an indivisible mesh axis
         # would otherwise surface as an XLA shape crash deep in a jit
@@ -102,8 +175,9 @@ class Engine:
         ps = page_aligned_size(paging.page_size, cfg)
         self.page_size = ps
         self.max_pages = -(-max_len // ps)
-        n_pages = paging.n_pages or n_slots * self.max_pages
-        self.pool = PagePool(n_pages, ps, n_slots, self.max_pages)
+        self._n_pages = paging.n_pages or n_slots * self.max_pages
+        self.pool = PagePool(self._n_pages, ps, n_slots, self.max_pages)
+        self._twb = paging.table_width_bucketing
         # KV-cache dtype: explicit override > the embed leaf's dtype >
         # cfg.dtype. A weight-only int8 tree (quant.quantize_tree) stores
         # the embed leaf as a {"q","s"} dict, which jnp.result_type used
@@ -117,9 +191,7 @@ class Engine:
         self.cache_dtype = dtype
         # placement owns where params and pools live (sharded under TP)
         self.params = self.placement.prepare_params(params, cfg)
-        self.cache = self.placement.prepare_cache(
-            lm.init_paged_cache(cfg, n_slots, max_len, page_size=ps,
-                                n_pages=n_pages, dtype=dtype))
+        self.cache = self.placement.prepare_cache(self._init_cache())
         if buckets is not None:
             if not supports_bucketing(cfg):
                 raise ValueError(
@@ -157,29 +229,55 @@ class Engine:
         self._last = put(jnp.zeros((n_slots, 1), jnp.int32))
         self._temps = put(jnp.zeros((n_slots,), jnp.float32))
         self._tables_dev = put(jnp.asarray(self.pool.tables))
-        self._tables_key = (self.pool.version, frozenset())
-        self.active: List[Optional[Request]] = [None] * n_slots
+        self._tables_key = (self.pool.version, frozenset(), self.max_pages)
+        self.active: List[Optional[_Pending]] = [None] * n_slots
         self.chunking: Dict[int, _ChunkState] = {}   # slot -> progress
         self.out_tokens: List[List[int]] = [[] for _ in range(n_slots)]
         self.started = [0.0] * n_slots
         self.ttft = [0.0] * n_slots
         self._token_times: List[List[float]] = [[] for _ in range(n_slots)]
-        self.queue: deque = deque()  # (Request, submission wall time)
+        self.queue: deque = deque()          # of _Pending
         self._prefill_lens: set = set()   # distinct padded lengths seen
         self._chunk_shapes: set = set()   # distinct chunk panel shapes
+        self._step_widths: set = set()    # distinct decode table widths
         self._stepped = False
         self.completed: List[Completion] = []
         self.kv_trace: List[List[int]] = []   # per-step live slot lengths
 
+        # lifecycle / fault-tolerance state
+        self.faults = faults if faults is not None else FaultPlan()
+        self.clock = 0               # run-loop tick, monotonic across runs
+        self.preempt_patience = preempt_patience
+        self.max_recoveries = max_recoveries
+        self.max_rid_failures = max_rid_failures
+        self.stats = {"preemptions": 0, "recoveries": 0,
+                      "recompute_tokens": 0, "nan_quarantined": 0,
+                      "alloc_faults": 0}
+        self.errors: List[str] = []  # reprs of recovered exceptions
+        self._terminal: set = set()  # rids with a terminal completion
+        self._fail_counts: Dict[int, int] = {}   # rid -> recovery replays
+        self._admit_seq = [0] * n_slots          # admission order (age)
+        self._seq = 0
+        self._head_blocked = 0       # consecutive iters the head waited
+
         def step_fn(params, cache, tokens, lengths, tables, temps, active,
-                    key):
+                    poison, key):
             logits, cache = lm.decode_step(params, cache, tokens, lengths,
                                            rcfg, pages=tables)
-            nxt = sampling.sample(logits, key, temperature=temps)
+            # fault injection + containment, both traced so the program
+            # count stays 1: `poison` overwrites a slot's logits with
+            # NaN (chaos testing the guard below); `bad` flags any
+            # non-finite row so the host can quarantine it. With poison
+            # all-False and finite logits both `where`s are identity —
+            # the guarded step is bitwise identical to the unguarded one.
+            logits = jnp.where(poison[:, None], jnp.nan, logits)
+            bad = ~jnp.all(jnp.isfinite(logits), axis=-1)
+            safe = jnp.where(bad[:, None], 0.0, logits)
+            nxt = sampling.sample(safe, key, temperature=temps)
             # idle / mid-prefill slots stay parked at length 0 writing
             # their private scratch page
             new_lengths = jnp.where(active, lengths + 1, 0)
-            return nxt, new_lengths, cache
+            return nxt, bad, new_lengths, cache
 
         def admit_fn(params, cache, lengths, last, tokens, slot, pages_row,
                      plen, temp, key):
@@ -188,10 +286,12 @@ class Engine:
             cache = lm.insert_prefill(rcfg, cache, states, slot=slot,
                                       pages=pages_row, plen=plen,
                                       page_size=ps)
-            first = sampling.sample(logits, key, temperature=temp[None])[0]
+            bad = ~jnp.all(jnp.isfinite(logits))
+            safe = jnp.where(bad, 0.0, logits)
+            first = sampling.sample(safe, key, temperature=temp[None])[0]
             lengths = lengths.at[slot].set(plen)
             last = last.at[slot, 0].set(first)
-            return first, cache, lengths, last
+            return first, bad, cache, lengths, last
 
         def chunk_fn(params, cache, tokens, offset, chunk_len, slot,
                      pages_row, lengths, last, temp, key):
@@ -199,30 +299,41 @@ class Engine:
                                              offset=offset,
                                              chunk_len=chunk_len,
                                              pages=pages_row[None])
-            tok = sampling.sample(logits, key, temperature=temp[None])[0]
+            # a NaN written by an *earlier* chunk propagates through the
+            # prefix-page attention into these logits, so checking the
+            # final chunk's flag covers the whole chunked prefill
+            bad = ~jnp.all(jnp.isfinite(logits))
+            safe = jnp.where(bad, 0.0, logits)
+            tok = sampling.sample(safe, key, temperature=temp[None])[0]
             # one program per chunk shape: every call samples and books
             # the slot's length, but the host only *fetches* the token
             # (and flips the slot active) on the final chunk — until
             # then decode keeps the slot masked out and re-zeroes these
             lengths = lengths.at[slot].set(offset + chunk_len)
             last = last.at[slot, 0].set(tok)
-            return tok, cache, lengths, last
+            return tok, bad, cache, lengths, last
 
         # donate the cache: the pool update aliases in place instead of
         # copying the whole (R, n_pages + n_slots, ps, Hkv, hd) pools
         # every step. Placement owns the jit: under TP the entry points
         # run in shard_map over the mesh, host operands replicated.
         self._step = self.placement.jit(
-            step_fn, kinds=(PARAMS, CACHE) + (REP,) * 6,
-            out_kinds=(REP, REP, CACHE), donate=(1,))
+            step_fn, kinds=(PARAMS, CACHE) + (REP,) * 7,
+            out_kinds=(REP, REP, REP, CACHE), donate=(1,))
         self._admit = self.placement.jit(
             admit_fn, kinds=(PARAMS, CACHE) + (REP,) * 8,
-            out_kinds=(REP, CACHE, REP, REP), donate=(1,))
+            out_kinds=(REP, REP, CACHE, REP, REP), donate=(1,))
         self._chunk = self.placement.jit(
             chunk_fn, kinds=(PARAMS, CACHE) + (REP,) * 9,
-            out_kinds=(REP, CACHE, REP, REP), donate=(1,))
+            out_kinds=(REP, REP, CACHE, REP, REP), donate=(1,))
 
     # ------------------------------------------------------------------
+
+    def _init_cache(self):
+        return lm.init_paged_cache(self.cfg, self.n_slots, self.max_len,
+                                   page_size=self.page_size,
+                                   n_pages=self._n_pages,
+                                   dtype=self.cache_dtype)
 
     def submit(self, req: Request):
         plen = int(req.prompt.shape[0])
@@ -237,80 +348,302 @@ class Engine:
             # rows and the prefill-sampled token retires it — there is
             # no in-bounds cache row left for a decode step to write
             req = dataclasses.replace(req, max_new=1)
-        self.queue.append((req, time.perf_counter()))
+        self.queue.append(_Pending(req=req, t0=time.perf_counter()))
 
     def compile_counts(self) -> dict:
         """Compiled-program counts of the three serving entry points —
         jax's jit cache size when available (ground truth), else the
         host-side proxy (distinct padded prefill lengths / chunk panel
-        shapes map 1:1 to compiled programs; one decode program once any
-        step ran)."""
+        shapes / decode table widths map 1:1 to compiled programs)."""
         def n(fn, fallback):
             return fn._cache_size() if hasattr(fn, "_cache_size") \
                 else fallback
         return {"prefill": n(self._admit, len(self._prefill_lens)),
                 "chunk": n(self._chunk, len(self._chunk_shapes)),
-                "step": n(self._step, int(self._stepped))}
+                "step": n(self._step, len(self._step_widths))}
 
     def _req_temp(self, req: Request) -> float:
         return self.temperature if req.temperature is None else \
             req.temperature
 
+    # -- lifecycle ------------------------------------------------------
+
+    def _finish(self, pend: _Pending, tokens: List[int], status: str, *,
+                ttft: float = 0.0, itl: Optional[List[float]] = None):
+        """The single exit point: every accepted unit of work passes
+        through here exactly once, whatever ended it."""
+        assert status in TERMINAL_STATUSES, status
+        assert not pend.finished, \
+            f"rid {pend.req.rid} reached a second terminal completion"
+        pend.finished = True
+        self._terminal.add(pend.req.rid)
+        self.completed.append(Completion(
+            rid=pend.req.rid, tokens=tokens,
+            prompt_len=int(pend.req.prompt.shape[0]),
+            latency_s=time.perf_counter() - pend.t0,
+            ttft_s=ttft if ttft else (pend.ttft or 0.0),
+            itl_s=itl if itl is not None else [], status=status))
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request wherever it is (queued, mid-prefill, or
+        decoding); returns False if the rid is unknown or already
+        terminal. The completion carries any tokens already produced."""
+        for slot, pend in enumerate(self.active):
+            if pend is not None and pend.req.rid == rid:
+                self._retire(slot, "cancelled")
+                return True
+        for slot, st in list(self.chunking.items()):
+            if st.pend.req.rid == rid:
+                del self.chunking[slot]
+                self.pool.release(slot)
+                self._finish(st.pend, list(st.pend.prior), "cancelled")
+                return True
+        for pend in list(self.queue):
+            if pend.req.rid == rid:
+                self.queue.remove(pend)
+                self._finish(pend, list(pend.prior), "cancelled")
+                return True
+        return False
+
+    def shutdown(self) -> List[Completion]:
+        """Drain the engine: every outstanding rid gets a terminal
+        ``preempted_requeued`` completion carrying its tokens so far
+        (resubmittable), and the engine returns to a clean, fully
+        serviceable state."""
+        self._flush_outstanding("preempted_requeued")
+        return self.completed
+
+    def _flush_outstanding(self, status: str):
+        """Terminal-complete every live slot and queued entry (slots in
+        admission order, then queue order), releasing all pool pages."""
+        live = sorted((s for s in range(self.n_slots)
+                       if self.active[s] is not None or s in self.chunking),
+                      key=lambda s: self._admit_seq[s])
+        for slot in live:
+            if self.active[slot] is not None:
+                self._retire(slot, status)
+            else:
+                st = self.chunking.pop(slot)
+                self.pool.release(slot)
+                self._finish(st.pend, list(st.pend.prior), status)
+        while self.queue:
+            pend = self.queue.popleft()
+            self._finish(pend, list(pend.prior), status)
+
+    def _sweep_deadlines(self):
+        now = time.perf_counter()
+
+        def over(p: _Pending) -> bool:
+            return (p.req.deadline_s is not None
+                    and now - p.t0 > p.req.deadline_s)
+
+        for slot in range(self.n_slots):
+            pend = self.active[slot]
+            if pend is not None and over(pend):
+                self._retire(slot, "deadline")
+        for slot in list(self.chunking):
+            st = self.chunking[slot]
+            if over(st.pend):
+                del self.chunking[slot]
+                self.pool.release(slot)
+                self._finish(st.pend, list(st.pend.prior), "deadline")
+        if any(over(p) for p in self.queue):
+            keep: deque = deque()
+            for pend in self.queue:
+                if over(pend):
+                    self._finish(pend, list(pend.prior), "deadline")
+                else:
+                    keep.append(pend)
+            self.queue = keep
+
+    # -- preemption -----------------------------------------------------
+
+    def _pend_at(self, slot: int) -> _Pending:
+        return self.active[slot] if self.active[slot] is not None \
+            else self.chunking[slot].pend
+
+    def _preempt_slot(self, slot: int):
+        """Evict a live slot: pages back to the free list, the request
+        back onto the queue (behind the blocked head) carrying its
+        produced tokens for bit-identical greedy resume."""
+        if self.active[slot] is not None:
+            pend = self.active[slot]
+            new = _Pending(req=pend.req, t0=pend.t0,
+                           prior=list(self.out_tokens[slot]),
+                           prior_times=list(self._token_times[slot]),
+                           ttft=self.ttft[slot])
+            self.active[slot] = None
+            self.out_tokens[slot] = []
+            self._token_times[slot] = []
+            self._host_len[slot] = 0
+        else:
+            # chunked prefill in flight: its pages roll back and the
+            # prompt replays from the top (no tokens produced yet)
+            new = self.chunking.pop(slot).pend
+        self.pool.release(slot)
+        self.stats["preemptions"] += 1
+        self.stats["recompute_tokens"] += (int(new.req.prompt.shape[0])
+                                           + max(len(new.prior) - 1, 0))
+        if self.queue:
+            self.queue.insert(1, new)    # behind the blocked head
+        else:
+            self.queue.appendleft(new)
+
+    def _maybe_preempt(self) -> bool:
+        """Called when the queue head could not admit this iteration.
+        Deadline inversion (a deadlined head starved by deadline-free or
+        laxer residents) always preempts; pure pool pressure preempts
+        only after `preempt_patience` consecutive blocked iterations."""
+        if not self.queue:
+            return False
+        live = [s for s in range(self.n_slots)
+                if self.active[s] is not None or s in self.chunking]
+        if not live:
+            return False
+        head = self.queue[0]
+        if head.req.deadline_s is not None:
+            def abs_dl(p: _Pending) -> float:
+                return (p.t0 + p.req.deadline_s
+                        if p.req.deadline_s is not None else float("inf"))
+            cands = [s for s in live if abs_dl(self._pend_at(s))
+                     > abs_dl(head)]
+            if cands:
+                self._preempt_slot(max(cands,
+                                       key=lambda s: self._admit_seq[s]))
+                return True
+        if (self.preempt_patience is not None
+                and self._head_blocked >= self.preempt_patience):
+            self._head_blocked = 0
+            self._preempt_slot(max(live,
+                                   key=lambda s: self._admit_seq[s]))
+            return True
+        return False
+
+    # -- admission ------------------------------------------------------
+
+    def _effective_prompt(self, pend: _Pending) -> np.ndarray:
+        """The token rows admission must (re)compute: the prompt, plus —
+        when resuming a preempted/recovered request — every produced
+        token but the last, whose KV row was never written (the prefill
+        sample re-derives it)."""
+        p = np.asarray(pend.req.prompt, np.int32)
+        if pend.prior:
+            p = np.concatenate(
+                [p, np.asarray(pend.prior[:-1], np.int32)])
+        return p
+
+    def _worst_case(self, pend: _Pending) -> int:
+        # KV rows ever written: the prompt plus one row per decode step
+        # (the final sampled token is returned, never written). Resume
+        # preserves it: prior tokens move rows from the decode side to
+        # the prompt side without changing the sum.
+        plen = int(pend.req.prompt.shape[0])
+        return min(self.max_len, plen + pend.req.max_new - 1)
+
     def _fill_slots(self) -> int:
+        # heads that could NEVER admit retire as failed instead of
+        # wedging the FIFO forever (the pool simply cannot hold them)
+        while self.queue:
+            pend = self.queue[0]
+            if (self.pool._pages_for(self._worst_case(pend))
+                    <= self.pool.n_pages):
+                break
+            self.queue.popleft()
+            self._finish(pend, list(pend.prior), "failed")
         admitted = 0
         for slot in range(self.n_slots):
             if (self.active[slot] is not None or slot in self.chunking
                     or not self.queue):
                 continue
-            req, t0 = self.queue[0]   # t0: submission time (TTFT base)
-            plen = int(req.prompt.shape[0])
-            # KV rows ever written: the prompt plus one row per decode
-            # step (the final sampled token is returned, never written)
-            worst = min(self.max_len, plen + req.max_new - 1)
+            pend = self.queue[0]
+            req = pend.req
+            worst = self._worst_case(pend)
             if not self.pool.can_admit(worst):
                 break                # FIFO: wait for pages, don't skip
+            prompt = self._effective_prompt(pend)
+            plen = int(prompt.shape[0])
+            self.pool.begin()
+            try:
+                self.pool.admit(slot, worst)
+                if self.prefill_chunk and plen > self.prefill_chunk:
+                    # chunked prefill: reserve now, run the prompt as
+                    # row panels across engine steps (_advance_chunks) —
+                    # pages are charged per chunk, and admission itself
+                    # costs no forward, so co-resident decode slots
+                    # never stall on the monolithic bucket program
+                    self.pool.commit()
+                    self.queue.popleft()
+                    self._seq += 1
+                    self._admit_seq[slot] = self._seq
+                    admitted += 1
+                    self.chunking[slot] = _ChunkState(
+                        pend=pend, prompt=prompt,
+                        sched=chunk_schedule(plen, self.prefill_chunk,
+                                             self.buckets))
+                    continue
+                self.pool.ensure(slot, plen)
+            except AllocFault:
+                self.pool.rollback()
+                self.stats["alloc_faults"] += 1
+                break                # retry the same head next iteration
+            self.pool.commit()
             self.queue.popleft()
+            self._seq += 1
+            self._admit_seq[slot] = self._seq
             admitted += 1
-            self.pool.admit(slot, worst)
-            if self.prefill_chunk and plen > self.prefill_chunk:
-                # chunked prefill: reserve now, run the prompt as row
-                # panels across engine steps (_advance_chunks) — pages
-                # are charged per chunk, and admission itself costs no
-                # forward, so co-resident decode slots never stall on
-                # the monolithic largest-bucket program
-                self.chunking[slot] = _ChunkState(
-                    req=req, t0=t0, prompt=np.asarray(req.prompt),
-                    sched=chunk_schedule(plen, self.prefill_chunk,
-                                         self.buckets))
-                continue
-            self.pool.ensure(slot, plen)
             bl = bucket_for(plen, self.buckets) if self.buckets else plen
             self._prefill_lens.add(bl)
             padded = np.zeros((1, bl), np.int32)
-            padded[0, :plen] = np.asarray(req.prompt)
+            padded[0, :plen] = prompt
             self.key, sk = jax.random.split(self.key)
-            first, self.cache, self.lengths, self._last = self._admit(
-                self.params, self.cache, self.lengths, self._last,
-                jnp.asarray(padded), jnp.int32(slot),
-                jnp.asarray(self.pool.tables[slot]), jnp.int32(plen),
-                jnp.float32(self._req_temp(req)), sk)
-            self._activate(slot, req, t0, int(first))
+            try:
+                first, bad, self.cache, self.lengths, self._last = \
+                    self._admit(
+                        self.params, self.cache, self.lengths, self._last,
+                        jnp.asarray(padded), jnp.int32(slot),
+                        jnp.asarray(self.pool.tables[slot]),
+                        jnp.int32(plen),
+                        jnp.float32(self._req_temp(req)), sk)
+                first, bad = jax.device_get((first, bad))
+            except Exception:
+                # the admit program itself died: restore the pool and
+                # the queue head before the recovery boundary takes over,
+                # so the rid is never lost and no pages leak
+                self.pool.release(slot)
+                self.queue.appendleft(pend)
+                raise
+            if bad:
+                # non-finite prefill logits: quarantine before the slot
+                # ever joins the lockstep batch
+                self.pool.release(slot)
+                self.stats["nan_quarantined"] += 1
+                self._finish(pend, list(pend.prior), "failed")
+                continue
+            self._activate(slot, pend, int(first))
         return admitted
 
-    def _activate(self, slot, req, t0, first: int):
+    def _activate(self, slot, pend: _Pending, first: int):
         """A slot's prefill (one-shot or final chunk) produced its first
-        token: move it to decode, book TTFT, retire if already done."""
+        token: move it to decode, book TTFT, retire if already done. On
+        resume, `first` re-derives the last pre-preemption token and the
+        earlier ones are restored from the host-side record."""
+        req = pend.req
         self._temps = self._temps.at[slot].set(self._req_temp(req))
-        self.active[slot] = req
-        self.out_tokens[slot] = [first]
-        self.started[slot] = t0
+        self.active[slot] = pend
+        self.out_tokens[slot] = list(pend.prior[:-1]) + [first]
+        self.started[slot] = pend.t0
         now = time.perf_counter()
-        self.ttft[slot] = now - t0
-        self._token_times[slot] = [now]
-        self._host_len[slot] = int(req.prompt.shape[0])
+        if pend.ttft is None:
+            pend.ttft = now - pend.t0
+        self.ttft[slot] = pend.ttft
+        self._token_times[slot] = list(pend.prior_times[:-1]) + [now]
+        self._host_len[slot] = (int(req.prompt.shape[0])
+                                + max(len(pend.prior) - 1, 0))
         # the prefill-sampled token can already finish the request
-        if first == self.eos_id or req.max_new <= 1:
-            self._retire(slot)
+        if first == self.eos_id:
+            self._retire(slot, "eos")
+        elif len(self.out_tokens[slot]) >= req.max_new:
+            self._retire(slot, "ok")
 
     def _advance_chunks(self) -> int:
         """Advance every mid-prefill slot by one bounded row panel.
@@ -318,40 +651,68 @@ class Engine:
         advanced = 0
         for slot in sorted(self.chunking):
             st = self.chunking[slot]
-            off, clen, shape = st.sched.pop(0)
+            off, clen, shape = st.sched[0]
+            self.pool.begin()
+            try:
+                self.pool.ensure(slot, off + clen)   # charged per chunk
+            except AllocFault:
+                self.pool.rollback()
+                self.stats["alloc_faults"] += 1
+                continue             # same panel retries next iteration
+            self.pool.commit()
             self._chunk_shapes.add(shape)
-            self.pool.ensure(slot, off + clen)       # charged per chunk
             padded = np.zeros((1, shape), np.int32)
             padded[0, :clen] = st.prompt[off:off + clen]
             self.key, sk = jax.random.split(self.key)
-            tok, self.cache, self.lengths, self._last = self._chunk(
+            tok, bad, self.cache, self.lengths, self._last = self._chunk(
                 self.params, self.cache, jnp.asarray(padded),
                 jnp.int32(off), jnp.int32(clen), jnp.int32(slot),
                 jnp.asarray(self.pool.tables[slot]),
                 self.lengths, self._last,
-                jnp.float32(self._req_temp(st.req)), sk)
+                jnp.float32(self._req_temp(st.pend.req)), sk)
+            st.sched.pop(0)
             advanced += 1
             if not st.sched:
-                # final chunk: the ONLY chunk whose token the host
-                # fetches — intermediate chunks stay fully async
+                # final chunk: the ONLY chunk whose outputs the host
+                # fetches — intermediate chunks stay fully async (a NaN
+                # they wrote reaches this chunk's logits via the prefix
+                # gather, so one flag covers the whole prefill)
+                tok, bad = jax.device_get((tok, bad))
                 del self.chunking[slot]
-                self._activate(slot, st.req, st.t0, int(tok))
+                if bad:
+                    self.pool.release(slot)
+                    self.stats["nan_quarantined"] += 1
+                    self._finish(st.pend, list(st.pend.prior), "failed")
+                else:
+                    self._activate(slot, st.pend, int(tok))
         return advanced
 
-    def _retire(self, slot):
-        req = self.active[slot]
+    def _retire(self, slot, status: str):
+        pend = self.active[slot]
         times = self._token_times[slot]
-        self.completed.append(Completion(
-            rid=req.rid, tokens=list(self.out_tokens[slot]),
-            prompt_len=int(req.prompt.shape[0]),
-            latency_s=time.perf_counter() - self.started[slot],
-            ttft_s=self.ttft[slot],
-            itl_s=[b - a for a, b in zip(times, times[1:])]))
+        self._finish(pend, list(self.out_tokens[slot]), status,
+                     ttft=self.ttft[slot],
+                     itl=[b - a for a, b in zip(times, times[1:])])
         self.pool.release(slot)
         self.active[slot] = None
         self.out_tokens[slot] = []
         self._token_times[slot] = []
         self._host_len[slot] = 0
+
+    # -- device mirrors -------------------------------------------------
+
+    def _table_width(self) -> int:
+        """Decode block-table width: `max_pages`, or — under table-width
+        bucketing — the batch max live pages rounded up to a power of
+        two, so the per-step gather reads what's live, not the worst
+        case. Safe for windowed rings: a slot's allocation always covers
+        its length, so the ring never wraps earlier than it would at
+        full width."""
+        if not self._twb:
+            return self.max_pages
+        hi = int(self.pool.n_alloc.max(initial=0))
+        width = 1 if hi <= 1 else 1 << (hi - 1).bit_length()
+        return min(width, self.max_pages)
 
     def _ship_tables(self):
         """Mirror the block tables to the device when they changed.
@@ -359,10 +720,11 @@ class Engine:
         lockstep decode step still writes a row for every slot, and the
         real table already names live pages the next chunk will fill —
         without the mask the decode write would land in them."""
-        key = (self.pool.version, frozenset(self.chunking))
+        width = self._table_width()
+        key = (self.pool.version, frozenset(self.chunking), width)
         if key == self._tables_key:
             return
-        tables = self.pool.tables
+        tables = self.pool.tables[:, :width]
         if self.chunking:
             tables = tables.copy()
             for s in self.chunking:
@@ -370,53 +732,173 @@ class Engine:
         self._tables_dev = self.placement.put_rep(jnp.asarray(tables))
         self._tables_key = key
 
+    # -- fault machinery ------------------------------------------------
+
+    def _arm_alloc_fault(self, clock: int):
+        """One-shot: the first page draw this iteration raises; later
+        draws (and iterations) succeed, so forward progress resumes."""
+        fired = []
+
+        def hook():
+            if not fired:
+                fired.append(True)
+                raise AllocFault(
+                    f"injected allocation failure @clock {clock}")
+        self.pool.alloc_hook = hook
+
+    def _recover(self):
+        """Recovery boundary: a step/admit/chunk raised, so the donated
+        cache (and any in-flight device state) is presumed lost. Rebuild
+        device state from scratch and replay every live request from its
+        host-side record — queued at the FRONT in admission order, so
+        recompute happens before new work. A rid that keeps tripping the
+        boundary retires as `failed` instead of looping forever."""
+        while self.pool.in_transaction():
+            self.pool.rollback()
+        self.cache = self.placement.prepare_cache(self._init_cache())
+        put = self.placement.put_rep
+        self.lengths = put(jnp.zeros((self.n_slots,), jnp.int32))
+        self._last = put(jnp.zeros((self.n_slots, 1), jnp.int32))
+        self._temps = put(jnp.zeros((self.n_slots,), jnp.float32))
+        live = sorted((s for s in range(self.n_slots)
+                       if self.active[s] is not None or s in self.chunking),
+                      key=lambda s: self._admit_seq[s])
+        for slot in reversed(live):      # appendleft keeps admission order
+            if self.active[slot] is not None:
+                pend = self.active[slot]
+                new = _Pending(req=pend.req, t0=pend.t0,
+                               prior=list(self.out_tokens[slot]),
+                               prior_times=list(self._token_times[slot]),
+                               ttft=self.ttft[slot])
+                self.active[slot] = None
+                self.out_tokens[slot] = []
+                self._token_times[slot] = []
+                self._host_len[slot] = 0
+            else:
+                new = self.chunking.pop(slot).pend
+            self.pool.release(slot)
+            rid = new.req.rid
+            self._fail_counts[rid] = self._fail_counts.get(rid, 0) + 1
+            if self._fail_counts[rid] > self.max_rid_failures:
+                self._finish(new, list(new.prior), "failed")
+            else:
+                self.stats["recompute_tokens"] += (
+                    int(new.req.prompt.shape[0])
+                    + max(len(new.prior) - 1, 0))
+                self.queue.appendleft(new)
+        self._tables_key = None      # force a reship
+
+    # -- the loop -------------------------------------------------------
+
     def run(self, max_steps: int = 10_000) -> List[Completion]:
         """Continuous-batching loop until queue + slots drain. One
-        iteration = admissions + one chunk per mid-prefill slot + one
-        lockstep decode step."""
+        iteration = deadline sweep + admissions (preempting if a
+        deadlined head is starved) + one chunk per mid-prefill slot +
+        one lockstep decode step. Hitting `max_steps` does NOT drop
+        work: everything outstanding terminal-completes as
+        `preempted_requeued` (tokens so far attached) and the engine
+        stays serviceable."""
         steps = 0
+        recoveries = 0
         self.kv_trace = []           # fresh trace per run (bounded host mem)
         while (any(a is not None for a in self.active) or self.queue
                or self.chunking):
-            admitted = self._fill_slots()
-            chunked = self._advance_chunks()
-            active = np.asarray([a is not None for a in self.active])
-            if not active.any():
-                if self.queue and not admitted and not chunked:
-                    raise RuntimeError(
-                        "request needs more KV pages than the pool holds "
-                        f"({self.pool.n_pages} x {self.page_size} tokens)")
-                if self.queue or self.chunking:
-                    continue         # everything admitted retired at once
-                break
-            for slot in np.flatnonzero(active):
-                # cover the position this step writes (lazy tail alloc)
-                self.pool.ensure(int(slot), int(self._host_len[slot]) + 1)
-            self._ship_tables()
-            self.key, sk = jax.random.split(self.key)
-            nxt, self.lengths, self.cache = self._step(
-                self.params, self.cache, self._last, self.lengths,
-                self._tables_dev, self._temps, jnp.asarray(active), sk)
-            self._last = nxt[:, None]
-            self._stepped = True
-            nxt_host = jax.device_get(nxt)  # the step's ONE device fetch
-            now = time.perf_counter()
-            self._host_len[active] += 1
-            self._host_len[~active] = 0
-            self.kv_trace.append(
-                [int(self._host_len[s]) for s in np.flatnonzero(active)])
-            for slot in np.flatnonzero(active):
-                slot = int(slot)
-                req = self.active[slot]
-                tok = int(nxt_host[slot])
-                self.out_tokens[slot].append(tok)
-                self._token_times[slot].append(now)
-                done = (tok == self.eos_id
-                        or len(self.out_tokens[slot]) >= req.max_new
-                        or int(self._host_len[slot]) >= self.max_len - 1)
-                if done:
-                    self._retire(slot)
-            steps += 1
             if steps >= max_steps:
+                self._flush_outstanding("preempted_requeued")
                 break
+            steps += 1
+            clock = self.clock
+            self.clock += 1
+            if self.faults.alloc_fails(clock):
+                self._arm_alloc_fault(clock)
+            slow = self.faults.slow_s(clock)
+            if slow:
+                time.sleep(slow)
+            try:
+                self._sweep_deadlines()
+                admitted = self._fill_slots()
+                if self.queue and admitted == 0:
+                    self._head_blocked += 1
+                    if self._maybe_preempt():
+                        admitted += self._fill_slots()
+                else:
+                    self._head_blocked = 0
+                self._advance_chunks()
+                active = np.asarray([a is not None for a in self.active])
+                if not active.any():
+                    if self.queue or self.chunking:
+                        continue     # blocked or mid-prefill: next tick
+                    break            # everything admitted retired at once
+                self.pool.begin()
+                try:
+                    for slot in np.flatnonzero(active):
+                        # cover the position this step writes (lazy tail)
+                        self.pool.ensure(int(slot),
+                                         int(self._host_len[slot]) + 1)
+                except AllocFault:
+                    self.pool.rollback()
+                    self.stats["alloc_faults"] += 1
+                    continue         # whole step retries next iteration
+                self.pool.commit()
+                self._ship_tables()
+                poison = np.zeros((self.n_slots,), bool)
+                pslots = self.faults.poison_slots(clock)
+                if pslots:
+                    for s in pslots:
+                        if s is None:
+                            poison |= active
+                        else:
+                            poison[s] = True
+                if self.faults.step_raises(clock):
+                    raise StepFault(
+                        f"injected step exception @clock {clock}")
+                self.key, sk = jax.random.split(self.key)
+                nxt, bad, self.lengths, self.cache = self._step(
+                    self.params, self.cache, self._last, self.lengths,
+                    self._tables_dev, self._temps, jnp.asarray(active),
+                    jnp.asarray(poison), sk)
+                self._last = nxt[:, None]
+                self._stepped = True
+                self._step_widths.add(int(self._tables_dev.shape[1]))
+                # the step's ONE device fetch (tokens + NaN flags travel
+                # in the same transfer)
+                nxt_host, bad_host = jax.device_get((nxt, bad))
+                now = time.perf_counter()
+                self._host_len[active] += 1
+                self._host_len[~active] = 0
+                self.kv_trace.append(
+                    [int(self._host_len[s])
+                     for s in np.flatnonzero(active)])
+                for slot in np.flatnonzero(active):
+                    slot = int(slot)
+                    pend = self.active[slot]
+                    if bad_host[slot]:
+                        # quarantine: this slot's logits went non-finite;
+                        # retire it alone, the lockstep batch moves on
+                        self.stats["nan_quarantined"] += 1
+                        self._retire(slot, "failed")
+                        continue
+                    tok = int(nxt_host[slot])
+                    self.out_tokens[slot].append(tok)
+                    self._token_times[slot].append(now)
+                    if tok == self.eos_id:
+                        self._retire(slot, "eos")
+                    elif len(self.out_tokens[slot]) >= pend.req.max_new:
+                        self._retire(slot, "ok")
+                    elif int(self._host_len[slot]) >= self.max_len - 1:
+                        self._retire(slot, "length")
+            except Exception as err:
+                # recovery boundary: injected StepFault or a real device
+                # error mid-step — the donated cache is presumed lost.
+                # (AllocFault is handled transactionally at its draw
+                # sites above and never reaches here.)
+                self.errors.append(repr(err))
+                self.stats["recoveries"] += 1
+                recoveries += 1
+                if recoveries > self.max_recoveries:
+                    self._flush_outstanding("failed")
+                    break
+                self._recover()
+            finally:
+                self.pool.alloc_hook = None
         return self.completed

@@ -14,10 +14,19 @@ module owns the mutable host state that fills those tables:
   * bucket policy — prompts are padded to a small static set of lengths
     (powers of two up to max_len) so continuous batching compiles
     O(n_buckets) prefill programs instead of O(unique prompt lengths).
+
+The pool is *transactional*: :meth:`PagePool.begin` snapshots the full
+allocator state and :meth:`PagePool.rollback` restores it, so a
+multi-step mutation (admission's admit+ensure, a speculative-decode
+draft's tail growth) either lands completely or not at all —
+allocation failures and preemption roll back instead of leaking pages.
+:meth:`PagePool.rollback_tail` is the fine-grained form: return just a
+slot's tail pages past a token count (rejected speculative drafts,
+preempted requests keeping nothing).
 """
 from __future__ import annotations
 
-from typing import List
+from typing import Callable, List, Optional
 
 import numpy as np
 
@@ -111,6 +120,10 @@ class PagePool:
         self.n_alloc = np.zeros(n_slots, np.int64)
         self.reserved = np.zeros(n_slots, np.int64)
         self.version = 0              # bumped on any table change
+        # Fault-injection seam: called before every free-list draw; may
+        # raise to simulate allocator exhaustion (see serve/faults.py).
+        self.alloc_hook: Optional[Callable[[], None]] = None
+        self._snapshots: List[tuple] = []
 
     def _pages_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.page_size)
@@ -131,6 +144,8 @@ class PagePool:
         """Grow the slot's table to cover ``n_tokens`` positions."""
         need = min(self._pages_for(n_tokens), self.tables.shape[1])
         while self.n_alloc[slot] < need:
+            if self.alloc_hook is not None:
+                self.alloc_hook()
             self.tables[slot, self.n_alloc[slot]] = self.free.pop()
             self.n_alloc[slot] += 1
             self.version += 1
@@ -147,3 +162,65 @@ class PagePool:
 
     def live_pages(self) -> int:
         return int(self.n_alloc.sum())
+
+    # -- transactions --------------------------------------------------
+    #
+    # begin/commit/rollback bracket multi-step mutations (admission's
+    # admit+ensure pair, speculative tail growth) so a failure midway —
+    # injected or real — restores the exact prior allocator state
+    # instead of leaking half an admission. Snapshots nest (LIFO).
+
+    def begin(self) -> None:
+        """Open a transaction: snapshot free list, tables, counters."""
+        self._snapshots.append((list(self.free), self.tables.copy(),
+                                self.n_alloc.copy(),
+                                self.reserved.copy()))
+
+    def commit(self) -> None:
+        """Close the innermost transaction, keeping its mutations."""
+        self._snapshots.pop()
+
+    def rollback(self) -> None:
+        """Abort the innermost transaction, restoring its snapshot.
+
+        ``version`` still bumps monotonically — consumers key shipped
+        block tables on it, and a rollback changes the tables even
+        though it *restores* them, so reuse of a pre-transaction
+        version number would leave stale device tables in place.
+        """
+        free, tables, n_alloc, reserved = self._snapshots.pop()
+        self.free, self.tables = free, tables
+        self.n_alloc, self.reserved = n_alloc, reserved
+        self.version += 1
+
+    def in_transaction(self) -> bool:
+        return bool(self._snapshots)
+
+    def rollback_tail(self, slot: int, n_tokens: int) -> int:
+        """Shrink a slot's allocation back to ``n_tokens`` positions,
+        returning tail pages to the free list (rejected speculative
+        drafts; ``n_tokens=0`` strips a preempted slot bare while its
+        reservation survives for re-admission). Returns the number of
+        pages freed. The reservation is *not* shrunk: the sequence's
+        worst case is unchanged by dropping its tail."""
+        keep = self._pages_for(n_tokens)
+        freed = 0
+        while self.n_alloc[slot] > keep:
+            self.n_alloc[slot] -= 1
+            self.free.append(int(self.tables[slot, self.n_alloc[slot]]))
+            self.tables[slot, self.n_alloc[slot]] = self.scratch[slot]
+            freed += 1
+            self.version += 1
+        return freed
+
+    def check_conservation(self) -> None:
+        """Assert the allocator invariants: every physical page is
+        exactly-once free or live, and no page id appears twice."""
+        live = [int(p) for s in range(self.tables.shape[0])
+                for p in self.tables[s, :int(self.n_alloc[s])]]
+        assert len(self.free) + len(live) == self.n_pages, (
+            f"page leak: {len(self.free)} free + {len(live)} live != "
+            f"{self.n_pages}")
+        seen = self.free + live
+        assert len(set(seen)) == len(seen), "double-allocated page"
+        assert set(seen) == set(range(self.n_pages)), "foreign page id"

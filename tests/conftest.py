@@ -1,5 +1,6 @@
 import os
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -26,6 +27,18 @@ try:
     settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
 except ImportError:                  # fast tier: no hypothesis installed
     pass
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_live_executables():
+    """Drop compiled programs between test modules. A full-suite process
+    otherwise accumulates every module's jitted engines plus the eager
+    dense-oracle scans; past a few hundred live XLA:CPU executables a
+    late compile segfaults inside backend_compile. Modules don't share
+    engines, so per-module clearing only re-pays the handful of common
+    oracle programs."""
+    yield
+    jax.clear_caches()
 
 
 @pytest.fixture

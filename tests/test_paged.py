@@ -368,6 +368,48 @@ def test_compile_stability_mixed_chunked_traffic():
 
 
 @pytest.mark.slow
+def test_table_width_bucketing_parity_and_compile_ladder():
+    """With ``table_width_bucketing`` on, the decode step sees block
+    tables sliced to the pow2-rounded max live page count instead of
+    always ``max_pages``. Streams stay bit-identical to the full-width
+    engine and the decode-step compile count is bounded by the width
+    ladder (one program per pow2 width <= max_pages) instead of 1."""
+    cfg = REDUCED["deepseek-7b"]()
+    key = jax.random.PRNGKey(9)
+    params, _ = lm.init_lm(key, cfg, dtype=jnp.float32)
+    n_new = 4
+    prompts = [jax.random.randint(jax.random.fold_in(key, i), (plen,), 0,
+                                  cfg.vocab)
+               for i, plen in enumerate([3, 9, 17, 26, 5])]
+
+    def run(twb):
+        eng = Engine(params, cfg, n_slots=2, max_len=32, eos_id=-1,
+                     paging=PagingConfig(page_size=4,
+                                         table_width_bucketing=twb))
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new=n_new))
+        done = {c.rid: c.tokens for c in eng.run()}
+        return eng, done
+
+    # the full-width engine is the oracle: its own dense-greedy parity
+    # is already pinned by the mixed-lengths test above
+    wide_eng, wide = run(False)
+    narrow_eng, narrow = run(True)
+    assert narrow == wide                       # bit-identical streams
+    # full-width engine keeps the PR 3 single-program guarantee...
+    assert wide_eng.compile_counts()["step"] == 1
+    # ...while the bucketed engine compiles one decode program per
+    # pow2 width actually used, bounded by the log2 ladder
+    ladder = int(np.log2(narrow_eng.max_pages)) + 1
+    steps = narrow_eng.compile_counts()["step"]
+    assert 0 < steps <= ladder
+    assert steps == len(narrow_eng._step_widths)
+    # short-prompt traffic really did use a narrower table
+    assert min(narrow_eng._step_widths) < narrow_eng.max_pages
+    assert all(w & (w - 1) == 0 for w in narrow_eng._step_widths)
+
+
+@pytest.mark.slow
 def test_oversubscribed_pool_defers_and_completes():
     """A pool smaller than full occupancy defers admission until pages
     free up, and every request still decodes the dense-greedy stream."""

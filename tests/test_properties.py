@@ -98,16 +98,21 @@ def test_hlo_cost_scales_with_trip_count(trips):
 @settings(max_examples=50, deadline=None)
 @given(st.data())
 def test_page_pool_invariants(data):
-    """Random admit / extend / retire traffic against the serving page
-    allocator, driven exactly the way the engine drives it (reservation
-    check, FIFO head-only admission, lazy ensure within the
-    reservation). Invariants after every operation:
+    """Random admit / extend / retire / transaction traffic against the
+    serving page allocator, driven exactly the way the engine drives it
+    (reservation check, FIFO head-only admission, lazy ensure within the
+    reservation, begin/commit/rollback brackets around mutations,
+    rollback_tail for speculative tail returns). Invariants after every
+    operation:
 
       * conservation — free pages + live pages == total real pages;
       * no page is ever granted twice (live table entries are distinct,
         disjoint from the free list, and never a scratch page);
-      * deferral is FIFO — requests are admitted in submission order;
-      * a retired slot's table points back at its OWN scratch page.
+      * deferral is FIFO — requests are admitted in submission order,
+        and a rolled-back admission replays without reordering;
+      * a retired slot's table points back at its OWN scratch page;
+      * ``rollback`` restores the exact pre-``begin`` allocator state
+        while still bumping ``version`` (shipped-table staleness).
     """
     n_slots = data.draw(st.integers(1, 4), label="n_slots")
     page_size = data.draw(st.sampled_from([4, 8, 16]), label="page_size")
@@ -123,8 +128,14 @@ def test_page_pool_invariants(data):
     live: dict = {}                       # slot -> (rid, reserved_tokens)
     next_rid = 0
     admitted = []
+    # model snapshots parallel to the pool's transaction stack: a
+    # rollback must revert the *driver's* view (queue, live set,
+    # admission log, rid counter) together with the allocator, exactly
+    # like the engine re-queues work whose admission rolled back
+    model_stack = []
     ops = data.draw(st.lists(
-        st.sampled_from(["submit", "admit", "extend", "retire"]),
+        st.sampled_from(["submit", "admit", "extend", "retire",
+                         "begin", "commit", "rollback", "rollback_tail"]),
         min_size=1, max_size=60), label="ops")
     for op in ops:
         if op == "submit":
@@ -149,6 +160,36 @@ def test_page_pool_invariants(data):
             pool.release(slot)
             del live[slot]
             assert (pool.tables[slot] == pool.scratch[slot]).all()
+        elif op == "begin":
+            pool.begin()
+            model_stack.append((deque(queue), dict(live), list(admitted),
+                                next_rid, list(pool.free),
+                                pool.tables.copy(), pool.n_alloc.copy(),
+                                pool.reserved.copy()))
+        elif op == "commit" and model_stack:
+            pool.commit()
+            model_stack.pop()
+        elif op == "rollback" and model_stack:
+            v0 = pool.version
+            pool.rollback()
+            (queue, live, admitted, next_rid,
+             free0, tables0, n_alloc0, reserved0) = model_stack.pop()
+            # exact state restoration, monotonic version
+            assert pool.free == free0
+            assert (pool.tables == tables0).all()
+            assert (pool.n_alloc == n_alloc0).all()
+            assert (pool.reserved == reserved0).all()
+            assert pool.version > v0
+        elif op == "rollback_tail" and live:
+            slot = data.draw(st.sampled_from(sorted(live)))
+            keep = data.draw(st.integers(0, live[slot][1]),
+                             label="keep_tokens")
+            before = int(pool.n_alloc[slot])
+            freed = pool.rollback_tail(slot, keep)
+            assert freed == before - int(pool.n_alloc[slot]) >= 0
+            # the reservation survives a tail rollback (the worst case
+            # of the sequence is unchanged by dropping its tail)
+            assert pool.reserved[slot] == pool._pages_for(live[slot][1])
         # conservation + no double allocation, after every op
         assert len(pool.free) + pool.live_pages() == n_pages
         granted = [int(p) for s in range(n_slots)
@@ -156,8 +197,14 @@ def test_page_pool_invariants(data):
         assert len(granted) == len(set(granted))
         assert set(granted).isdisjoint(pool.free)
         assert all(p < n_pages for p in granted)
+    # unwind any still-open transactions: keep their mutations
+    while pool.in_transaction():
+        pool.commit()
+        model_stack.pop()
+    assert len(pool.free) + pool.live_pages() == n_pages
     # FIFO: the admitted requests are exactly the first ones submitted,
-    # in order — deferral never reorders past the queue head
+    # in order — deferral (and rollback replay) never reorders past the
+    # queue head
     assert admitted == list(range(len(admitted)))
 
 
