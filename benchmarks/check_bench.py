@@ -26,6 +26,8 @@ REQUIRED = {
                        "config"),
     "BENCH_PR7.json": ("goodput", "preemptions", "recompute", "statuses",
                        "config"),
+    "BENCH_PR8.json": ("hit_rate", "flops", "live_pages", "ttft",
+                       "parity", "compiles", "config"),
 }
 
 

@@ -5,7 +5,8 @@ block-pipeline artifact (BENCH_PR2.json), the PR 3 paged-serving
 artifact (BENCH_PR3.json), the PR 4 decode weight-traffic artifact
 (BENCH_PR4.json), the PR 5 chunked-prefill TTFT artifact
 (BENCH_PR5.json), the PR 7 preemption-pressure artifact
-(BENCH_PR7.json) and the PR 6 tensor-parallel artifact
+(BENCH_PR7.json), the PR 8 prefix-cache artifact (BENCH_PR8.json)
+and the PR 6 tensor-parallel artifact
 (BENCH_PR6.json — run as a subprocess: the emulated mesh needs
 XLA_FLAGS set before jax initialises, which has already happened in
 this process).
@@ -24,7 +25,8 @@ def main() -> None:
     from benchmarks.paper_tables import ALL
     from benchmarks.roofline_report import roofline_report
     from benchmarks.serve_bench import (chunked_prefill_bench,
-                                        preemption_bench, serve_bench)
+                                        preemption_bench,
+                                        prefix_cache_bench, serve_bench)
 
     rows = []
 
@@ -42,6 +44,7 @@ def main() -> None:
     decode_bench(emit, json_path="BENCH_PR4.json")
     chunked_prefill_bench(emit, json_path="BENCH_PR5.json")
     preemption_bench(emit, json_path="BENCH_PR7.json")
+    prefix_cache_bench(emit, json_path="BENCH_PR8.json")
     sys.stdout.flush()
     tp = subprocess.run(
         [sys.executable,

@@ -1,4 +1,11 @@
-"""PR 3 + PR 5 + PR 7 serving benches: paged-KV engine traces.
+"""PR 3 + PR 5 + PR 7 + PR 8 serving benches: paged-KV engine traces.
+
+``prefix_cache_bench`` (PR 8) prices the radix-tree prefix cache on a
+shared-system-prompt trace (the production regime: many users, a
+handful of system prompts). Writes ``BENCH_PR8.json`` — prefix hit
+rate, modeled prefill-FLOPs saved, peak live-page reduction, and p95
+TTFT hit vs miss with the queue-wait / compute split — and asserts
+greedy parity cache-on vs cache-off plus the compile bound.
 
 ``preemption_bench`` (PR 7) prices fault-tolerant scheduling: a pool
 sized below the trace's worst-case demand forces pool-pressure
@@ -44,6 +51,7 @@ import numpy as np
 
 from repro.configs import REDUCED
 from repro.core.block_traffic import (chunked_prefill_traffic_cfg,
+                                      prefix_cache_traffic,
                                       serve_kv_traffic)
 from repro.core.types import PagingConfig
 from repro.models import lm
@@ -84,12 +92,20 @@ def serve_bench(emit, json_path=None, *, n_slots: int = 4,
 
     total_new = sum(len(c.tokens) for c in done)
     ttfts = [c.ttft_s for c in done]
+    # TTFT split (PR 8 reporting fix): queue wait (submission -> first
+    # admission) vs compute (admission -> first token), so a cache-hit
+    # trace can attribute its TTFT win to skipped prefill rather than a
+    # shorter queue
+    queues = [c.queue_s for c in done]
+    computes = [c.ttft_s - c.queue_s for c in done]
     throughput = {
         "requests": len(done),
         "decoded_tokens": total_new,
         "tokens_per_s": total_new / dt,
         "ttft_ms_mean": statistics.mean(ttfts) * 1e3,
         "ttft_ms_max": max(ttfts) * 1e3,
+        "queue_ms_mean": statistics.mean(queues) * 1e3,
+        "compute_ttft_ms_mean": statistics.mean(computes) * 1e3,
         "wall_s": dt,
     }
     traffic = serve_kv_traffic(eng.kv_trace, cfg, n_slots=n_slots,
@@ -302,10 +318,150 @@ def preemption_bench(emit, json_path=None, *, n_slots: int = 4,
     return result
 
 
+def prefix_cache_bench(emit, json_path=None, *, n_slots: int = 4,
+                       max_len: int = 128, page_size: int = 16,
+                       chunk: int = 32, n_sys: int = 2,
+                       sys_len: int = 64, n_requests: int = 12,
+                       tail_len: int = 8, max_new: int = 8):
+    """PR 8: the shared-system-prompt trace. ``n_requests`` prompts are
+    ``n_sys`` system prompts of ``sys_len`` tokens plus a unique
+    ``tail_len``-token user turn; one warm-up request per system prompt
+    seeds the radix tree (and compiles every chunk shape), then the
+    timed trace runs with the prefix cache on and off.
+
+    Asserts the ISSUE acceptance criteria: greedy parity on vs off,
+    >= 80% prefix hit rate, >= 5x modeled prefill-FLOPs reduction,
+    a strict peak-unique-live-page reduction, and the
+    ``n_buckets + n_chunk_shapes + 1`` compile bound unchanged."""
+    cfg = REDUCED["deepseek-7b"]()
+    key = jax.random.PRNGKey(0)
+    params, _ = lm.init_lm(key, cfg, dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    sys_prompts = [rng.integers(2, cfg.vocab - 2, sys_len)
+                   for _ in range(n_sys)]
+    prompts = [np.concatenate(
+        [sys_prompts[i % n_sys],
+         rng.integers(2, cfg.vocab - 2, tail_len)]).astype(np.int32)
+        for i in range(n_requests)]
+
+    def drive(prefix_on):
+        eng = Engine(params, cfg, n_slots=n_slots, max_len=max_len,
+                     eos_id=-1,
+                     paging=PagingConfig(page_size=page_size,
+                                         prefill_chunk=chunk,
+                                         prefix_cache=prefix_on))
+        # warm-up: one request per system prompt — seeds the tree (on
+        # the cached run) and compiles every chunk shape + decode
+        for i, sp in enumerate(sys_prompts):
+            warm = np.concatenate(
+                [sp, rng.integers(2, cfg.vocab - 2, tail_len)]
+            ).astype(np.int32)
+            eng.submit(Request(rid=-1 - i, prompt=jnp.asarray(warm),
+                               max_new=2))
+        eng.run()
+        eng.completed.clear()
+        base = dict(eng.stats)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=jnp.asarray(p),
+                               max_new=max_new))
+        t0 = time.perf_counter()
+        done = eng.run()
+        wall = time.perf_counter() - t0
+        delta = {k: eng.stats[k] - base[k] for k in eng.stats}
+        counts = eng.compile_counts()
+        n_chunk_shapes = len([b for b in eng.buckets
+                              if b <= eng.prefill_chunk])
+        assert (counts["prefill"] + counts["chunk"] + counts["step"]
+                <= len(eng.buckets) + n_chunk_shapes + 1), counts
+        eng.pool.check_conservation()
+        return eng, done, wall, delta, counts
+
+    eng_off, done_off, wall_off, _, counts_off = drive(False)
+    eng_on, done_on, wall_on, delta, counts_on = drive(True)
+
+    streams_off = {c.rid: list(c.tokens) for c in done_off}
+    streams_on = {c.rid: list(c.tokens) for c in done_on}
+    parity = streams_off == streams_on
+    assert parity, "prefix cache changed a greedy stream"
+
+    # hit rate + modeled FLOPs from the timed-trace stat deltas
+    assert delta["prefix_hits"] == n_requests, delta
+    plen = sys_len + tail_len
+    hit_per_req = delta["prefix_hit_tokens"] // n_requests
+    traffic = prefix_cache_traffic(
+        cfg, [(plen, hit_per_req)] * n_requests, page_size=page_size)
+    assert traffic["hit_rate"] >= 0.8, traffic
+    assert traffic["flops_ratio"] >= 5.0, traffic
+
+    # live pages: peak distinct physical pages over the timed trace
+    peak_on = max(u for u, _ in eng_on.page_trace)
+    peak_off = max(u for u, _ in eng_off.page_trace)
+    assert peak_on < peak_off, (peak_on, peak_off)
+
+    def pct(xs, q):
+        return float(np.percentile(np.asarray(xs) * 1e3, q))
+
+    ttft = {
+        "hit_ttft_ms_p95": pct([c.ttft_s for c in done_on], 95),
+        "miss_ttft_ms_p95": pct([c.ttft_s for c in done_off], 95),
+        "hit_queue_ms_p95": pct([c.queue_s for c in done_on], 95),
+        "miss_queue_ms_p95": pct([c.queue_s for c in done_off], 95),
+        "hit_compute_ttft_ms_p95": pct(
+            [c.ttft_s - c.queue_s for c in done_on], 95),
+        "miss_compute_ttft_ms_p95": pct(
+            [c.ttft_s - c.queue_s for c in done_off], 95),
+    }
+
+    emit("bench.serve.prefix.hit_rate", 0,
+         f"{traffic['hit_rate']:.3f} over {n_requests} reqs "
+         f"({delta['prefix_hit_tokens']}/{delta['prompt_tokens']} tokens)")
+    emit("bench.serve.prefix.flops", 0,
+         f"prefill FLOPs {traffic['flops_cold']} -> "
+         f"{traffic['flops_actual']} ({traffic['flops_ratio']:.1f}x)")
+    emit("bench.serve.prefix.live_pages", 0,
+         f"peak unique {peak_off} -> {peak_on} pages")
+    emit("bench.serve.prefix.ttft", ttft["hit_ttft_ms_p95"] * 1e3,
+         f"p95 TTFT hit {ttft['hit_ttft_ms_p95']:.1f}ms vs miss "
+         f"{ttft['miss_ttft_ms_p95']:.1f}ms (compute "
+         f"{ttft['hit_compute_ttft_ms_p95']:.1f} vs "
+         f"{ttft['miss_compute_ttft_ms_p95']:.1f})")
+
+    result = {
+        "hit_rate": {"rate": traffic["hit_rate"],
+                     "hits": delta["prefix_hits"],
+                     "hit_tokens": delta["prefix_hit_tokens"],
+                     "prompt_tokens": delta["prompt_tokens"],
+                     "cow_copies": delta["cow_copies"],
+                     "cow_in_place": delta["cow_in_place"],
+                     "share_deferrals": delta["share_deferrals"]},
+        "flops": {k: traffic[k] for k in
+                  ("flops_cold", "flops_actual", "flops_saved",
+                   "flops_ratio", "hit_kv_bytes")},
+        "live_pages": {"peak_unique_on": peak_on,
+                       "peak_unique_off": peak_off,
+                       "ratio": peak_off / peak_on},
+        "ttft": ttft,
+        "parity": parity,
+        "compiles": {"on": counts_on, "off": counts_off,
+                     "buckets": eng_on.buckets},
+        "config": {"arch": cfg.name, "n_slots": n_slots,
+                   "max_len": max_len, "page_size": page_size,
+                   "prefill_chunk": chunk, "n_sys": n_sys,
+                   "sys_len": sys_len, "n_requests": n_requests,
+                   "tail_len": tail_len, "max_new": max_new,
+                   "wall_s_on": wall_on, "wall_s_off": wall_off},
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(result, f, indent=2)
+    return result
+
+
 def main():
     json_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_PR3.json"
     json_path5 = sys.argv[2] if len(sys.argv) > 2 else "BENCH_PR5.json"
     json_path7 = sys.argv[3] if len(sys.argv) > 3 else "BENCH_PR7.json"
+    json_path8 = sys.argv[4] if len(sys.argv) > 4 else "BENCH_PR8.json"
 
     def emit(name, us, derived):
         print(f"{name},{us:.1f},{derived}")
@@ -316,6 +472,8 @@ def main():
     print(f"wrote {json_path5}")
     preemption_bench(emit, json_path=json_path7)
     print(f"wrote {json_path7}")
+    prefix_cache_bench(emit, json_path=json_path8)
+    print(f"wrote {json_path8}")
 
 
 if __name__ == "__main__":

@@ -316,6 +316,76 @@ def serve_kv_traffic(trace, cfg, *, n_slots: int, max_len: int,
 
 
 # ----------------------------------------------------------------------
+# Prefix-cache traffic: prefill FLOPs and KV bytes a radix hit skips
+# ----------------------------------------------------------------------
+
+
+def prefix_prefill_flops(cfg, plen: int, hit: int = 0) -> int:
+    """Modeled prefill FLOPs for a prompt whose first ``hit`` tokens are
+    served by shared prefix-cache pages (``hit=0`` = the cold cost).
+
+    Linear work (qkv / wo / mlp projections, 2 FLOPs per MAC) scales
+    with the *suffix* token count — cached rows run no forward at all.
+    Attention score+value work scales with the skipped (query, key)
+    pairs: suffix queries still attend the cached prefix through the
+    page gather, so only pairs whose *query* is cached drop — per
+    attention layer ``4 * Hq * hd`` FLOPs per pair over
+    ``T(plen) - T(hit)`` pairs, ``T(n) = n(n+1)/2``. Embedding and
+    lm_head are excluded (both regimes pay them for the tokens they
+    actually run, and the hit side's share is in the linear term).
+    Global attention only — the engine excludes sliding-window archs
+    from the prefix cache."""
+    qo = cfg.n_heads * cfg.head_dim
+    kvo = cfg.n_kv_heads * cfg.head_dim
+    d = cfg.d_model
+    gated = cfg.act in GATED_ACTS
+    suffix = plen - hit
+    pairs = plen * (plen + 1) // 2 - hit * (hit + 1) // 2
+    total = 0
+    for stage in cfg.stages():
+        for blk in stage.body:
+            r = stage.repeat
+            if blk.mixer == "attn":
+                total += r * (2 * d * (qo + 2 * kvo)    # qkv projection
+                              + 2 * qo * d) * suffix    # wo projection
+                total += r * 4 * qo * pairs             # scores + values
+            if blk.ffn == "mlp":
+                total += r * (6 if gated else 4) * d * cfg.d_ff * suffix
+    return total
+
+
+def prefix_cache_traffic(cfg, requests, *, page_size: int,
+                         dtype_bytes: int = 2) -> dict:
+    """Aggregate the prefix-cache win over a request trace.
+
+    ``requests``: list of ``(plen, hit)`` pairs — prompt length and
+    cached-prefix tokens per admission (``Engine.stats`` supplies the
+    aggregates; identical-shape traces can synthesize the list).
+    Returns prompt/hit token totals, the hit rate, cold vs actual
+    prefill FLOPs (:func:`prefix_prefill_flops`) with their ratio, and
+    ``hit_kv_bytes`` — the KV write traffic the shared pages absorb
+    (rows the slot never recomputes *or* rewrites)."""
+    prompt_tokens = sum(p for p, _ in requests)
+    hit_tokens = sum(h for _, h in requests)
+    flops_cold = sum(prefix_prefill_flops(cfg, p) for p, _ in requests)
+    flops_actual = sum(prefix_prefill_flops(cfg, p, h)
+                       for p, h in requests)
+    n_global, _, _ = kv_layer_counts(cfg)
+    row = 2 * cfg.n_kv_heads * cfg.head_dim * dtype_bytes
+    return {
+        "prompt_tokens": prompt_tokens,
+        "hit_tokens": hit_tokens,
+        "hit_rate": hit_tokens / prompt_tokens if prompt_tokens else 0.0,
+        "flops_cold": flops_cold,
+        "flops_actual": flops_actual,
+        "flops_saved": flops_cold - flops_actual,
+        "flops_ratio": (flops_cold / flops_actual
+                        if flops_actual else float("inf")),
+        "hit_kv_bytes": n_global * hit_tokens * row,
+    }
+
+
+# ----------------------------------------------------------------------
 # Tensor-parallel serving traffic: per-device KV + weight bytes under
 # head-/segment-sharding, with the cross-device all-reduce term (PR 6)
 # ----------------------------------------------------------------------

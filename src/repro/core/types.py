@@ -88,6 +88,18 @@ class PagingConfig:
     # Costs up to log2(max_pages) extra compiled decode programs (one
     # per table width), so it is opt-in.
     table_width_bucketing: bool = False
+    # Radix-tree prefix cache over token prefixes: admission maps fully
+    # shared prompt pages straight into the new slot's block table
+    # (refcount++, zero prefill FLOPs) and chunked prefill processes
+    # only the uncached suffix. Requires prefill_chunk > 0 (suffixes
+    # replay through the chunk ladder, keeping the compile bound) and a
+    # bucketing-capable, all-global-attention arch (sliding-window ring
+    # writes would clobber shared pages); silently off otherwise.
+    prefix_cache: bool = False
+    # Sarathi-style cap on prefill tokens advanced per engine step
+    # across mid-prefill slots (0 => unbounded). The head of the chunk
+    # queue always advances, so prefill can't fully starve.
+    prefill_token_budget: int = 0
 
 
 @dataclasses.dataclass(frozen=True)

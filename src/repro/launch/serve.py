@@ -43,6 +43,18 @@ def main(argv=None):
                          "Prompts longer than this split across engine "
                          "steps interleaved with decode, removing the "
                          "TTFT cliff the largest bucket causes")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix-tree prefix cache over token prefixes: "
+                         "admission maps fully shared prompt pages into "
+                         "the new slot's block table and chunked "
+                         "prefill replays only the uncached suffix "
+                         "(requires --prefill-chunk; sliding-window "
+                         "archs silently opt out)")
+    ap.add_argument("--prefill-token-budget", type=int, default=0,
+                    help="Sarathi-style cap on prefill tokens advanced "
+                         "per engine step across mid-prefill slots "
+                         "(0 = unbounded; the oldest slot always "
+                         "advances)")
     ap.add_argument("--prompt-len", type=int, default=4,
                     help="base synthetic prompt length (request i gets "
                          "prompt_len + i %% 8 tokens); raise above "
@@ -84,9 +96,11 @@ def main(argv=None):
     params, _ = lm.init_lm(key, cfg, dtype=jnp.float32)
     eng = Engine(params, cfg, n_slots=args.slots, max_len=args.max_len,
                  eos_id=-1, temperature=args.temperature, seed=args.seed,
-                 paging=PagingConfig(page_size=args.page_size,
-                                     n_pages=args.n_pages,
-                                     prefill_chunk=args.prefill_chunk),
+                 paging=PagingConfig(
+                     page_size=args.page_size, n_pages=args.n_pages,
+                     prefill_chunk=args.prefill_chunk,
+                     prefix_cache=args.prefix_cache,
+                     prefill_token_budget=args.prefill_token_budget),
                  placement=placement, faults=plan,
                  preempt_patience=args.preempt_patience)
     for i in range(args.requests):

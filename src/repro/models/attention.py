@@ -569,7 +569,15 @@ def write_chunk_pages(pool: PagedKVCache, k_new, v_new, offset, chunk_len,
     and keep only the chunk's last ``window`` positions — earlier rows
     would be clobbered by a later in-chunk position at the same ring
     slot, and no future query needs them — which also keeps the
-    scatter's target indices duplicate-free."""
+    scatter's target indices duplicate-free.
+
+    Shared-page contract (PR 8): every page this scatter can touch —
+    logical pages ``offset // ps .. (offset + chunk_len - 1) // ps`` —
+    must be slot-private (refcount 1). The engine guarantees it: a
+    prefix-cache hit starts the chunk schedule *after* the shared
+    pages, and the partially-shared boundary page is remapped by
+    :func:`copy_page` (``PagePool.cow``) before the first chunk that
+    writes into it."""
     b, sc = k_new.shape[:2]
     ps = pool.k.shape[1]
     i = jnp.arange(sc)
@@ -589,6 +597,20 @@ def write_chunk_pages(pool: PagedKVCache, k_new, v_new, offset, chunk_len,
                                   mode="drop"),
         v=pool.v.at[pid, off].set(v_new.astype(pool.v.dtype),
                                   mode="drop"))
+
+
+def copy_page(pool: PagedKVCache, src, dst):
+    """Copy one physical page's K/V rows ``src`` → ``dst`` (traced int32
+    scalars) on the *stored* 5-D leaves (R, P, ps, Hkv, hd) — the
+    copy-on-write step before a slot's first write into a shared
+    prefix-cache page. ``src == dst`` is the identity (the non-COW
+    steady state), so the copy folds into the chunk program as two
+    scalar operands instead of a separate compiled unit. Rows past the
+    kept prefix carry donor garbage; length masking hides them until
+    the slot overwrites them — the same contract scratch pages rely
+    on."""
+    return PagedKVCache(k=pool.k.at[:, dst].set(pool.k[:, src]),
+                        v=pool.v.at[:, dst].set(pool.v[:, src]))
 
 
 def paged_chunk_apply(params, x, pool: PagedKVCache, *, cfg: ModelConfig,

@@ -602,7 +602,12 @@ def insert_prefill(cfg: ModelConfig, cache, states, *, slot, pages, plen,
     granted the slot (``pages``: (max_pages,) physical ids); recurrent /
     cross-attention state writes batch row ``slot``. ``slot`` and
     ``plen`` may be traced scalars, so one compiled program serves every
-    slot at a given bucket length."""
+    slot at a given bucket length.
+
+    Shared-page contract (PR 8): one-shot prefill scatters the *whole*
+    prompt, so the engine only routes through here on a prefix-cache
+    miss — every granted page is slot-private (refcount 1). Cache hits
+    take the chunked path, which starts past the shared pages."""
     out = []
     for si, stage in enumerate(cfg.stages()):
         sc = {}
@@ -665,6 +670,20 @@ def prefill_chunk(params, cache, tokens, cfg: ModelConfig, *, offset,
         x, jnp.broadcast_to(idx, (b, 1, x.shape[-1])), axis=1)
     logits = unembed(params, xl, cfg)
     return logits[:, 0], new_cache
+
+
+def cow_copy(cache, src, dst):
+    """Copy-on-write page copy across every paged attention layer:
+    physical page ``src``'s K/V rows land in page ``dst`` (traced int32
+    scalars; see :func:`attention.copy_page`). ``src == dst`` is the
+    identity, which is how the engine folds the copy into every chunk
+    step — non-COW chunks pass ``(0, 0)`` and compile the same program.
+    Non-attention state (recurrent, cross-KV) is untouched."""
+    return jax.tree.map(
+        lambda c: (attention.copy_page(c, src, dst)
+                   if isinstance(c, attention.PagedKVCache) else c),
+        cache,
+        is_leaf=lambda c: isinstance(c, attention.PagedKVCache))
 
 
 def decode_step(params, cache, tokens, lengths, cfg: ModelConfig,

@@ -93,6 +93,7 @@ from repro.serve.placement import CACHE, PARAMS, REP, SingleDevice
 from repro.serve.paging import (PagePool, bucket_for, chunk_schedule,
                                 default_buckets, page_aligned_size,
                                 supports_bucketing)
+from repro.serve.prefix_cache import PrefixCache
 
 TERMINAL_STATUSES = ("ok", "eos", "length", "deadline", "cancelled",
                      "preempted_requeued", "failed")
@@ -116,6 +117,13 @@ class Completion:
     latency_s: float                 # submission -> retirement
     ttft_s: float = 0.0              # submission -> first token (queue
     #                                  wait + prefill, the serving TTFT)
+    queue_s: float = 0.0             # submission -> first admission: the
+    #                                  queue-wait component of ttft_s,
+    #                                  split out so a bench can attribute
+    #                                  a prefix-cache hit's TTFT win to
+    #                                  skipped compute rather than a
+    #                                  shorter queue (never-admitted
+    #                                  requests report their full latency)
     itl_s: List[float] = dataclasses.field(default_factory=list)
     #                                  inter-token gaps (len(tokens) - 1
     #                                  entries): the stall a co-resident
@@ -138,6 +146,8 @@ class _Pending:
     prior_times: List[float] = dataclasses.field(default_factory=list)
     ttft: Optional[float] = None     # preserved across preemption: the
     #                                  first token was already delivered
+    admit_t: Optional[float] = None  # first admission wall time (queue_s
+    #                                  base), preserved across preemption
     finished: bool = False           # exactly-once terminal guard
 
 
@@ -148,6 +158,12 @@ class _ChunkState:
     prompt: np.ndarray               # (S,) int32 effective prompt
     sched: List[tuple]               # remaining (offset, len, shape)
     #                                  panels (paging.chunk_schedule)
+    hit: int = 0                     # prompt tokens served by shared
+    #                                  prefix-cache pages (sched covers
+    #                                  only positions >= hit)
+    cow: bool = False                # the page at hit // page_size is a
+    #                                  COW-pending shared page: remap it
+    #                                  before the first chunk writes in
 
 
 class Engine:
@@ -221,6 +237,28 @@ class Engine:
                     f"bucket ladder {self.buckets} (chunk shapes reuse "
                     "the ladder to bound the compile count)")
 
+        # radix-tree prefix cache (PR 8): admission maps fully shared
+        # prompt pages into the new slot's table (zero prefill FLOPs)
+        # and chunked prefill replays only the uncached suffix.
+        # Sliding-window archs are silently excluded — the one per-slot
+        # block table is shared across layers, and a ring write through
+        # a shared page would clobber every other mapper's cached
+        # prefix — as are bucketing-incapable archs (no chunk path).
+        self.prefix_cache: Optional[PrefixCache] = None
+        self.prefill_token_budget = paging.prefill_token_budget
+        windowed = any(blk.mixer == "attn" and blk.window
+                       for stage in cfg.stages() for blk in stage.body)
+        if paging.prefix_cache and self.buckets is not None \
+                and not windowed:
+            if not self.prefill_chunk:
+                raise ValueError(
+                    "prefix_cache requires prefill_chunk: cache hits "
+                    "prefill only the uncached suffix through the chunk "
+                    "program (suffix shapes stay on the bucket ladder, "
+                    "keeping the compile bound)")
+            self.prefix_cache = PrefixCache(self.pool)
+            self.pool.reclaimer = self.prefix_cache
+
         # recurring jit operands are committed through the placement so
         # their sharding signature never flips host->mesh mid-run
         put = self.placement.put_rep
@@ -252,7 +290,15 @@ class Engine:
         self.max_rid_failures = max_rid_failures
         self.stats = {"preemptions": 0, "recoveries": 0,
                       "recompute_tokens": 0, "nan_quarantined": 0,
-                      "alloc_faults": 0}
+                      "alloc_faults": 0,
+                      # prefix-cache counters (PR 8)
+                      "prefix_hits": 0, "prefix_hit_tokens": 0,
+                      "prompt_tokens": 0, "cow_copies": 0,
+                      "cow_in_place": 0, "share_deferrals": 0,
+                      # token-budgeted chunk scheduling
+                      "budget_deferred_chunks": 0}
+        self.page_trace: List[tuple] = []   # per-step (unique, mapped)
+        self._share_deferred = False
         self.errors: List[str] = []  # reprs of recovered exceptions
         self._terminal: set = set()  # rids with a terminal completion
         self._fail_counts: Dict[int, int] = {}   # rid -> recovery replays
@@ -294,7 +340,15 @@ class Engine:
             return first, bad, cache, lengths, last
 
         def chunk_fn(params, cache, tokens, offset, chunk_len, slot,
-                     pages_row, lengths, last, temp, key):
+                     pages_row, lengths, last, temp, key, cow_src,
+                     cow_dst):
+            # copy-on-write seam, folded into the chunk program: before
+            # the first chunk that writes into a partially-shared
+            # prefix page, the host remaps the table row and passes the
+            # (src, dst) physical ids here; every other chunk passes
+            # (0, 0) — an identity self-copy — so ONE compiled program
+            # serves both and the non-COW path stays bitwise identical
+            cache = lm.cow_copy(cache, cow_src, cow_dst)
             logits, cache = lm.prefill_chunk(params, cache, tokens, rcfg,
                                              offset=offset,
                                              chunk_len=chunk_len,
@@ -324,7 +378,7 @@ class Engine:
             admit_fn, kinds=(PARAMS, CACHE) + (REP,) * 8,
             out_kinds=(REP, REP, CACHE, REP, REP), donate=(1,))
         self._chunk = self.placement.jit(
-            chunk_fn, kinds=(PARAMS, CACHE) + (REP,) * 9,
+            chunk_fn, kinds=(PARAMS, CACHE) + (REP,) * 11,
             out_kinds=(REP, REP, CACHE, REP, REP), donate=(1,))
 
     # ------------------------------------------------------------------
@@ -377,11 +431,14 @@ class Engine:
             f"rid {pend.req.rid} reached a second terminal completion"
         pend.finished = True
         self._terminal.add(pend.req.rid)
+        now = time.perf_counter()
         self.completed.append(Completion(
             rid=pend.req.rid, tokens=tokens,
             prompt_len=int(pend.req.prompt.shape[0]),
-            latency_s=time.perf_counter() - pend.t0,
+            latency_s=now - pend.t0,
             ttft_s=ttft if ttft else (pend.ttft or 0.0),
+            queue_s=(pend.admit_t - pend.t0
+                     if pend.admit_t is not None else now - pend.t0),
             itl_s=itl if itl is not None else [], status=status))
 
     def cancel(self, rid: int) -> bool:
@@ -471,7 +528,7 @@ class Engine:
             new = _Pending(req=pend.req, t0=pend.t0,
                            prior=list(self.out_tokens[slot]),
                            prior_times=list(self._token_times[slot]),
-                           ttft=self.ttft[slot])
+                           ttft=self.ttft[slot], admit_t=pend.admit_t)
             self.active[slot] = None
             self.out_tokens[slot] = []
             self._token_times[slot] = []
@@ -540,6 +597,57 @@ class Engine:
         plen = int(pend.req.prompt.shape[0])
         return min(self.max_len, plen + pend.req.max_new - 1)
 
+    def _make_room(self, draws: int):
+        """Evict LRU prefix-cache branches until the free list covers
+        the ``draws`` page draws the caller is about to make. Must run
+        BEFORE the transaction bracketing the draws: a rollback
+        restores refcounts but cannot resurrect a dropped tree node, so
+        an in-transaction eviction would strand the page forever."""
+        if self.prefix_cache is not None and draws > len(self.pool.free):
+            self.prefix_cache.reclaim(draws - len(self.pool.free))
+
+    def _prefix_match(self, prompt: np.ndarray):
+        """Walk the prefix cache for an admission candidate: returns
+        ``(shared_pages, partial, hit_tokens)`` — physical ids covering
+        fully-cached prompt pages, an optional ``(page, keep)`` COW
+        candidate for the next partially-shared page, and the total
+        cached token count. The hit is capped at ``plen - 1`` so at
+        least one suffix token remains: its chunk forward produces the
+        prompt's first-token logits (a fully-cached page-aligned prompt
+        demotes its last full page to a COW partial)."""
+        if self.prefix_cache is None:
+            return [], None, 0
+        plen = int(prompt.shape[0])
+        pages, partial = self.prefix_cache.match(prompt)
+        ps = self.page_size
+        cap = plen - 1
+        if len(pages) * ps > cap:
+            partial = (pages[-1], cap - (len(pages) - 1) * ps)
+            pages = pages[:-1]
+        keep = partial[1] if partial is not None else 0
+        keep = min(keep, cap - len(pages) * ps)
+        partial = (partial[0], keep) if partial is not None and keep > 0 \
+            else None
+        hit = len(pages) * ps + (partial[1] if partial else 0)
+        return pages, partial, hit
+
+    def _share_defer(self, prompt: np.ndarray, hit: int) -> bool:
+        """Duplicate-prefix admission race (two near-identical prompts
+        in flight): True when some mid-prefill slot is computing a
+        longer shared prefix than the tree serves today — by the time
+        that provider activates (inserting its pages), re-matching maps
+        them for free instead of recomputing them into private pages."""
+        if self.prefix_cache is None:
+            return False
+        plen = int(prompt.shape[0])
+        best = 0
+        for st in self.chunking.values():
+            m = min(plen, int(st.prompt.shape[0]))
+            diff = np.flatnonzero(prompt[:m] != st.prompt[:m])
+            n = int(diff[0]) if diff.size else m
+            best = max(best, (n // self.page_size) * self.page_size)
+        return min(best, plen - 1) > hit
+
     def _fill_slots(self) -> int:
         # heads that could NEVER admit retire as failed instead of
         # wedging the FIFO forever (the pool simply cannot hold them)
@@ -551,6 +659,7 @@ class Engine:
             self.queue.popleft()
             self._finish(pend, list(pend.prior), "failed")
         admitted = 0
+        self._share_deferred = False
         for slot in range(self.n_slots):
             if (self.active[slot] is not None or slot in self.chunking
                     or not self.queue):
@@ -558,10 +667,57 @@ class Engine:
             pend = self.queue[0]
             req = pend.req
             worst = self._worst_case(pend)
-            if not self.pool.can_admit(worst):
-                break                # FIFO: wait for pages, don't skip
             prompt = self._effective_prompt(pend)
             plen = int(prompt.shape[0])
+            shared, partial, hit = self._prefix_match(prompt)
+            if self._share_defer(prompt, hit):
+                # an in-flight chunked prefill is building a longer
+                # shared prefix than the tree holds today: admitting now
+                # would recompute its pages into private copies — wait
+                # for the provider instead. run() does not count this
+                # as a blocked head, so the provider is never preempted
+                # to "unblock" the head it is about to serve.
+                self._share_deferred = True
+                self.stats["share_deferrals"] += 1
+                break
+            if not self.pool.can_admit_pages(
+                    self.pool._pages_for(worst)
+                    + (1 if partial is not None else 0)):
+                break                # FIFO: wait for pages, don't skip
+            self.stats["prompt_tokens"] += plen
+            if hit:
+                # prefix-cache hit: map the shared pages (refcount++,
+                # zero prefill FLOPs for those rows) and schedule only
+                # the uncached suffix through the chunk path; a
+                # partially-covered boundary page maps COW-pending (its
+                # private replacement is the +1 page charged above)
+                self.pool.begin()
+                self.pool.admit(slot, worst)
+                self.pool.map_shared(slot, shared)
+                if partial is not None:
+                    self.pool.map_shared(slot, [partial[0]],
+                                         cow_tail=True)
+                self.pool.commit()
+                self.queue.popleft()
+                if pend.admit_t is None:
+                    pend.admit_t = time.perf_counter()
+                self._seq += 1
+                self._admit_seq[slot] = self._seq
+                admitted += 1
+                self.stats["prefix_hits"] += 1
+                self.stats["prefix_hit_tokens"] += hit
+                self.chunking[slot] = _ChunkState(
+                    pend=pend, prompt=prompt,
+                    sched=[(hit + o, c, s) for o, c, s in
+                           chunk_schedule(plen - hit, self.prefill_chunk,
+                                          self.buckets)],
+                    hit=hit, cow=partial is not None)
+                continue
+            if not (self.prefill_chunk and plen > self.prefill_chunk):
+                # one-shot prefill draws the whole prompt inside the
+                # transaction below — evict LRU branches first (never
+                # inside: rollback can't resurrect a dropped node)
+                self._make_room(self.pool._pages_for(plen))
             self.pool.begin()
             try:
                 self.pool.admit(slot, worst)
@@ -573,6 +729,8 @@ class Engine:
                     # never stall on the monolithic bucket program
                     self.pool.commit()
                     self.queue.popleft()
+                    if pend.admit_t is None:
+                        pend.admit_t = time.perf_counter()
                     self._seq += 1
                     self._admit_seq[slot] = self._seq
                     admitted += 1
@@ -588,6 +746,8 @@ class Engine:
                 break                # retry the same head next iteration
             self.pool.commit()
             self.queue.popleft()
+            if pend.admit_t is None:
+                pend.admit_t = time.perf_counter()
             self._seq += 1
             self._admit_seq[slot] = self._seq
             admitted += 1
@@ -628,6 +788,14 @@ class Engine:
         resume, `first` re-derives the last pre-preemption token and the
         earlier ones are restored from the host-side record."""
         req = pend.req
+        if self.prefix_cache is not None:
+            # adopt the slot's freshly written full prompt pages into
+            # the radix tree (shared prefixes keep their incumbent
+            # node). Decode never writes them: the decode write lands
+            # at page plen_eff // ps, past every *full* prompt page.
+            prompt = self._effective_prompt(pend)
+            if int(prompt.shape[0]) >= self.page_size:
+                self.prefix_cache.insert(prompt, self.pool.tables[slot])
         self._temps = self._temps.at[slot].set(self._req_temp(req))
         self.active[slot] = pend
         self.out_tokens[slot] = list(pend.prior[:-1]) + [first]
@@ -646,20 +814,55 @@ class Engine:
             self._retire(slot, "ok")
 
     def _advance_chunks(self) -> int:
-        """Advance every mid-prefill slot by one bounded row panel.
-        Returns the number of chunks processed (scheduling progress)."""
+        """Advance mid-prefill slots by one bounded row panel each,
+        oldest admission first, under the optional Sarathi-style
+        per-step prefill token budget (``paging.prefill_token_budget``:
+        padded chunk tokens per step; the oldest slot always advances,
+        so prefill can't fully starve — the budget trades prefill
+        throughput for decode cadence when cache-miss suffixes of mixed
+        lengths pile up). Returns the number of chunks processed."""
         advanced = 0
-        for slot in sorted(self.chunking):
+        spent = 0
+        budget = self.prefill_token_budget
+        for slot in sorted(self.chunking,
+                           key=lambda s: self._admit_seq[s]):
             st = self.chunking[slot]
             off, clen, shape = st.sched[0]
+            if budget and advanced and spent + shape > budget:
+                self.stats["budget_deferred_chunks"] += 1
+                continue
+            draws = max(0, self.pool._pages_for(off + clen)
+                        - int(self.pool.n_alloc[slot]))
+            if st.cow:
+                draws += 1           # worst case: the COW private copy
+            self._make_room(draws)
+            cow_src = cow_dst = 0
             self.pool.begin()
             try:
                 self.pool.ensure(slot, off + clen)   # charged per chunk
+                if st.cow:
+                    # first suffix chunk always writes into the
+                    # partially-shared boundary page (off == hit lands
+                    # mid-page): remap it before the scatter
+                    src, dst = self.pool.cow(slot,
+                                             st.hit // self.page_size)
+                    if src != dst:
+                        cow_src, cow_dst = src, dst
+                        self.stats["cow_copies"] += 1
+                    else:
+                        self.stats["cow_in_place"] += 1
             except AllocFault:
                 self.pool.rollback()
                 self.stats["alloc_faults"] += 1
-                continue             # same panel retries next iteration
+                continue             # same panel (and COW) retries next
             self.pool.commit()
+            st.cow = False
+            if self.prefix_cache is not None:
+                for lp in range(off // self.page_size,
+                                (off + clen - 1) // self.page_size + 1):
+                    pg = int(self.pool.tables[slot, lp])
+                    assert self.pool.refs[pg] == 1, (
+                        f"chunk would scatter into shared page {pg}")
             self._chunk_shapes.add(shape)
             padded = np.zeros((1, shape), np.int32)
             padded[0, :clen] = st.prompt[off:off + clen]
@@ -669,7 +872,9 @@ class Engine:
                 jnp.int32(off), jnp.int32(clen), jnp.int32(slot),
                 jnp.asarray(self.pool.tables[slot]),
                 self.lengths, self._last,
-                jnp.float32(self._req_temp(st.pend.req)), sk)
+                jnp.float32(self._req_temp(st.pend.req)), sk,
+                jnp.int32(cow_src), jnp.int32(cow_dst))
+            spent += shape
             st.sched.pop(0)
             advanced += 1
             if not st.sched:
@@ -769,7 +974,8 @@ class Engine:
                 new = _Pending(req=pend.req, t0=pend.t0,
                                prior=list(self.out_tokens[slot]),
                                prior_times=list(self._token_times[slot]),
-                               ttft=self.ttft[slot])
+                               ttft=self.ttft[slot],
+                               admit_t=pend.admit_t)
                 self.active[slot] = None
                 self.out_tokens[slot] = []
                 self._token_times[slot] = []
@@ -786,6 +992,10 @@ class Engine:
                     int(new.req.prompt.shape[0])
                     + max(len(new.prior) - 1, 0))
                 self.queue.appendleft(new)
+        if self.prefix_cache is not None:
+            # the rebuilt device cache is zeroed: cached pages no longer
+            # hold the bytes their keys promise, so the tree drops too
+            self.prefix_cache.reset()
         self._tables_key = None      # force a reship
 
     # -- the loop -------------------------------------------------------
@@ -801,6 +1011,7 @@ class Engine:
         steps = 0
         recoveries = 0
         self.kv_trace = []           # fresh trace per run (bounded host mem)
+        self.page_trace = []         # per-step (unique physical, mapped)
         while (any(a is not None for a in self.active) or self.queue
                or self.chunking):
             if steps >= max_steps:
@@ -818,17 +1029,28 @@ class Engine:
                 self._sweep_deadlines()
                 admitted = self._fill_slots()
                 if self.queue and admitted == 0:
-                    self._head_blocked += 1
-                    if self._maybe_preempt():
-                        admitted += self._fill_slots()
+                    # a share-deferred head is *waiting on* a resident
+                    # prefill, not starved by it: counting it as blocked
+                    # could preempt the very slot about to serve it
+                    if not self._share_deferred:
+                        self._head_blocked += 1
+                        if self._maybe_preempt():
+                            admitted += self._fill_slots()
                 else:
                     self._head_blocked = 0
                 self._advance_chunks()
+                self.page_trace.append((self.pool.unique_live(),
+                                        self.pool.live_pages()))
                 active = np.asarray([a is not None for a in self.active])
                 if not active.any():
                     if self.queue or self.chunking:
                         continue     # blocked or mid-prefill: next tick
                     break            # everything admitted retired at once
+                self._make_room(sum(
+                    max(0, self.pool._pages_for(
+                        int(self._host_len[s]) + 1)
+                        - int(self.pool.n_alloc[s]))
+                    for s in np.flatnonzero(active)))
                 self.pool.begin()
                 try:
                     for slot in np.flatnonzero(active):
@@ -840,6 +1062,13 @@ class Engine:
                     self.stats["alloc_faults"] += 1
                     continue         # whole step retries next iteration
                 self.pool.commit()
+                if self.prefix_cache is not None:
+                    for s in np.flatnonzero(active):
+                        pg = int(self.pool.tables[
+                            int(s),
+                            int(self._host_len[s]) // self.page_size])
+                        assert self.pool.refs[pg] == 1, (
+                            f"decode write aimed at shared page {pg}")
                 self._ship_tables()
                 poison = np.zeros((self.n_slots,), bool)
                 pslots = self.faults.poison_slots(clock)

@@ -23,6 +23,19 @@ allocation failures and preemption roll back instead of leaking pages.
 :meth:`PagePool.rollback_tail` is the fine-grained form: return just a
 slot's tail pages past a token count (rejected speculative drafts,
 preempted requests keeping nothing).
+
+Pages are *refcounted* (PR 8): the prefix cache
+(``serve/prefix_cache.py``) maps one physical page into many block
+tables — and holds its own reference — so a page returns to the free
+list only when its last reference drops. :meth:`PagePool.map_shared`
+appends existing pages to a slot's table (refcount++),
+:meth:`PagePool.cow` remaps a shared table entry to a freshly drawn
+private page (copy-on-write; a sole-owner page is written in place
+instead), and :meth:`PagePool.deref` is how the cache releases an
+evicted branch. A ``reclaimer`` (the cache) extends
+:meth:`can_admit`'s notion of "available" with LRU-evictable cached
+pages; evictions themselves must happen OUTSIDE transactions — a
+rollback restores refcounts but cannot resurrect a dropped tree node.
 """
 from __future__ import annotations
 
@@ -119,20 +132,43 @@ class PagePool:
                                 axis=1).astype(np.int32)
         self.n_alloc = np.zeros(n_slots, np.int64)
         self.reserved = np.zeros(n_slots, np.int64)
+        # per-page reference counts: #block-table rows naming the page
+        # plus one per prefix-cache node holding it
+        self.refs = np.zeros(n_pages, np.int64)
+        # logical index of a slot's COW-pending shared page (-1 = none):
+        # the page counts in n_alloc but its private replacement is a
+        # draw the reservation must still cover (see can_admit_pages)
+        self.cow_idx = np.full(n_slots, -1, np.int64)
         self.version = 0              # bumped on any table change
         # Fault-injection seam: called before every free-list draw; may
         # raise to simulate allocator exhaustion (see serve/faults.py).
         self.alloc_hook: Optional[Callable[[], None]] = None
+        # Optional prefix cache: evictable() widens can_admit's notion
+        # of available pages with LRU-reclaimable cached branches
+        self.reclaimer = None
         self._snapshots: List[tuple] = []
 
     def _pages_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.page_size)
 
+    def available(self) -> int:
+        """Pages admission may count on: the free list plus whatever the
+        reclaimer (prefix cache) could evict under pressure."""
+        extra = self.reclaimer.evictable() if self.reclaimer else 0
+        return len(self.free) + extra
+
+    def can_admit_pages(self, n_pages: int) -> bool:
+        """True when ``n_pages`` fresh pages fit on top of every live
+        slot's outstanding reservation (lazily-drawn remainder plus one
+        owed private copy per COW-pending shared page)."""
+        outstanding = int((self.reserved - self.n_alloc).sum()
+                          + (self.cow_idx >= 0).sum())
+        return self.available() - outstanding >= n_pages
+
     def can_admit(self, n_tokens: int) -> bool:
-        """True when the free list can cover a worst-case ``n_tokens``
+        """True when the pool can cover a worst-case ``n_tokens``
         sequence on top of every live slot's outstanding reservation."""
-        outstanding = int((self.reserved - self.n_alloc).sum())
-        return len(self.free) - outstanding >= self._pages_for(n_tokens)
+        return self.can_admit_pages(self._pages_for(n_tokens))
 
     def admit(self, slot: int, n_tokens: int) -> None:
         """Reserve worst-case capacity for a slot (caller checked
@@ -146,22 +182,90 @@ class PagePool:
         while self.n_alloc[slot] < need:
             if self.alloc_hook is not None:
                 self.alloc_hook()
-            self.tables[slot, self.n_alloc[slot]] = self.free.pop()
+            page = self.free.pop()
+            self.refs[page] = 1
+            self.tables[slot, self.n_alloc[slot]] = page
             self.n_alloc[slot] += 1
             self.version += 1
 
+    def map_shared(self, slot: int, pages, cow_tail: bool = False) -> None:
+        """Append already-referenced pages (a prefix-cache hit) to the
+        slot's table: refcount++ per page, no free-list draw. With
+        ``cow_tail`` the last mapped page is only *partially* covered by
+        the slot's prompt — it is copy-on-write pending (:meth:`cow`
+        must remap it before the first write into its range), and its
+        private replacement stays charged against the reservation."""
+        for p in pages:
+            p = int(p)
+            assert 0 <= p < self.n_pages and self.refs[p] >= 1, (
+                f"mapping unreferenced page {p}")
+            self.refs[p] += 1
+            self.tables[slot, self.n_alloc[slot]] = p
+            self.n_alloc[slot] += 1
+            self.version += 1
+        if cow_tail:
+            assert pages, "cow_tail without mapped pages"
+            self.cow_idx[slot] = self.n_alloc[slot] - 1
+
+    def cow(self, slot: int, logical: int) -> tuple:
+        """Copy-on-write a slot's table entry before its first write:
+        draw a private page, remap the row, drop one reference on the
+        shared original (the device copies the kept prefix rows —
+        ``lm.cow_copy``). Returns ``(src, dst)``; a sole-owner page
+        (refcount 1) is written in place instead — ``src == dst`` and
+        nothing is drawn."""
+        src = int(self.tables[slot, logical])
+        assert logical < self.n_alloc[slot] and src < self.n_pages
+        if self.cow_idx[slot] == logical:
+            self.cow_idx[slot] = -1
+        if self.refs[src] == 1:
+            return src, src
+        if self.alloc_hook is not None:
+            self.alloc_hook()
+        dst = self.free.pop()
+        self.refs[dst] = 1
+        self.refs[src] -= 1
+        self.tables[slot, logical] = dst
+        self.version += 1
+        return src, dst
+
+    def ref_page(self, page: int) -> None:
+        """Take a reference on a live page (a prefix-cache node adopting
+        a slot's written prompt page)."""
+        assert self.refs[page] >= 1, f"ref on dead page {page}"
+        self.refs[page] += 1
+
+    def deref(self, page: int) -> bool:
+        """Drop one reference; the page returns to the free list only
+        when the last reference drops (returns True then)."""
+        self.refs[page] -= 1
+        assert self.refs[page] >= 0, f"refcount underflow on page {page}"
+        if self.refs[page] == 0:
+            self.free.append(int(page))
+            return True
+        return False
+
     def release(self, slot: int) -> None:
-        """Retire a slot: pages back to the free list, table back to the
+        """Retire a slot: drop one reference per table entry (pages the
+        prefix cache still holds stay allocated), table back to the
         slot's scratch page."""
         n = int(self.n_alloc[slot])
-        self.free.extend(int(p) for p in self.tables[slot, :n])
+        for p in self.tables[slot, :n]:
+            self.deref(int(p))
         self.tables[slot, :] = self.scratch[slot]
         self.n_alloc[slot] = 0
         self.reserved[slot] = 0
+        self.cow_idx[slot] = -1
         self.version += 1
 
     def live_pages(self) -> int:
+        """Table-mapped logical pages (shared pages count once per slot
+        mapping them — the gather-volume view the engine prices)."""
         return int(self.n_alloc.sum())
+
+    def unique_live(self) -> int:
+        """Distinct referenced physical pages (the occupancy view)."""
+        return self.n_pages - len(self.free)
 
     # -- transactions --------------------------------------------------
     #
@@ -174,7 +278,8 @@ class PagePool:
         """Open a transaction: snapshot free list, tables, counters."""
         self._snapshots.append((list(self.free), self.tables.copy(),
                                 self.n_alloc.copy(),
-                                self.reserved.copy()))
+                                self.reserved.copy(), self.refs.copy(),
+                                self.cow_idx.copy()))
 
     def commit(self) -> None:
         """Close the innermost transaction, keeping its mutations."""
@@ -187,10 +292,18 @@ class PagePool:
         block tables on it, and a rollback changes the tables even
         though it *restores* them, so reuse of a pre-transaction
         version number would leave stale device tables in place.
+
+        Refcounts restore with the rest of the state, which is why
+        prefix-cache evictions must happen *before* ``begin``: a
+        rollback cannot resurrect the tree node that held the
+        reference, so an in-transaction eviction would strand the
+        restored refcount forever.
         """
-        free, tables, n_alloc, reserved = self._snapshots.pop()
+        (free, tables, n_alloc, reserved, refs,
+         cow_idx) = self._snapshots.pop()
         self.free, self.tables = free, tables
         self.n_alloc, self.reserved = n_alloc, reserved
+        self.refs, self.cow_idx = refs, cow_idx
         self.version += 1
 
     def in_transaction(self) -> bool:
@@ -202,25 +315,39 @@ class PagePool:
         drafts; ``n_tokens=0`` strips a preempted slot bare while its
         reservation survives for re-admission). Returns the number of
         pages freed. The reservation is *not* shrunk: the sequence's
-        worst case is unchanged by dropping its tail."""
+        worst case is unchanged by dropping its tail. Shared
+        (prefix-cache) tail pages only lose this slot's reference —
+        ``freed`` counts pages actually returned to the free list."""
         keep = self._pages_for(n_tokens)
         freed = 0
         while self.n_alloc[slot] > keep:
             self.n_alloc[slot] -= 1
-            self.free.append(int(self.tables[slot, self.n_alloc[slot]]))
+            if self.deref(int(self.tables[slot, self.n_alloc[slot]])):
+                freed += 1
             self.tables[slot, self.n_alloc[slot]] = self.scratch[slot]
-            freed += 1
             self.version += 1
+        if self.cow_idx[slot] >= self.n_alloc[slot]:
+            self.cow_idx[slot] = -1
         return freed
 
     def check_conservation(self) -> None:
-        """Assert the allocator invariants: every physical page is
-        exactly-once free or live, and no page id appears twice."""
-        live = [int(p) for s in range(self.tables.shape[0])
-                for p in self.tables[s, :int(self.n_alloc[s])]]
-        assert len(self.free) + len(live) == self.n_pages, (
-            f"page leak: {len(self.free)} free + {len(live)} live != "
-            f"{self.n_pages}")
-        seen = self.free + live
-        assert len(set(seen)) == len(seen), "double-allocated page"
-        assert set(seen) == set(range(self.n_pages)), "foreign page id"
+        """Assert the allocator invariants under refcounting: every
+        physical page is exactly-once free (refcount 0) or referenced
+        (refcount ≥ 1), the free list holds no duplicates, and no block
+        table names a page more often than its refcount covers."""
+        assert len(self.free) == len(set(self.free)), "double-freed page"
+        assert all(0 <= p < self.n_pages for p in self.free), (
+            "foreign page id on free list")
+        referenced = int((self.refs > 0).sum())
+        assert len(self.free) + referenced == self.n_pages, (
+            f"page leak: {len(self.free)} free + {referenced} "
+            f"referenced != {self.n_pages}")
+        assert all(self.refs[p] == 0 for p in self.free), (
+            "free page with live refcount")
+        mult = np.zeros(self.n_pages, np.int64)
+        for s in range(self.tables.shape[0]):
+            for p in self.tables[s, :int(self.n_alloc[s])]:
+                assert 0 <= p < self.n_pages, "foreign page id in table"
+                mult[int(p)] += 1
+        assert (mult <= self.refs).all(), (
+            "table names a page beyond its refcount")

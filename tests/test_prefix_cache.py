@@ -1,0 +1,347 @@
+"""Radix-tree prefix cache + copy-on-write refcounted pages (PR 8).
+
+The fast tier exercises the host side in isolation: radix match /
+insert / LRU eviction against a bare PagePool, the refcount life of a
+shared page, COW resolution (private copy vs in-place claim), and the
+engine's config gates (chunked prefill required, sliding-window archs
+silently opt out). The slow tier drives the full engine: cache-on
+greedy streams must be bit-identical to the dense oracle AND to the
+cache-off engine across hit / miss / partial-page-COW admissions, a
+duplicate prompt submitted the same step must defer-then-share instead
+of racing a private copy, a cache-hit slot must survive pool-pressure
+preemption with an exact stream, the Sarathi token budget must defer
+chunks without changing tokens, and tree eviction under pool pressure
+must keep every request terminal.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+from conftest import manual_greedy
+
+from repro.configs import REDUCED
+from repro.core.types import PagingConfig
+from repro.models import lm
+from repro.serve.engine import Engine, Request
+from repro.serve.paging import PagePool
+from repro.serve.prefix_cache import PrefixCache
+
+
+# ----------------------------------------------------------------------
+# Radix tree + refcounted pool, no model (fast)
+# ----------------------------------------------------------------------
+
+
+def _pool_with_cache(n_pages=8, ps=4, n_slots=2, max_pages=8):
+    pool = PagePool(n_pages, ps, n_slots, max_pages)
+    cache = PrefixCache(pool)
+    pool.reclaimer = cache
+    return pool, cache
+
+
+def test_radix_insert_match_partial():
+    pool, cache = _pool_with_cache()
+    pool.admit(0, 12)
+    pool.ensure(0, 12)                        # 3 pages of 4 tokens
+    prompt = list(range(12))
+    assert cache.insert(prompt, pool.tables[0]) == 3
+    pages = [int(p) for p in pool.tables[0, :3]]
+    # tree reference on top of the slot's table mapping
+    assert all(pool.refs[p] == 2 for p in pages)
+    # exact replay: every full page matches, nothing partial
+    assert cache.match(prompt) == (pages, None)
+    # trailing tokens past the cached pages don't confuse the walk
+    assert cache.match(prompt + [77]) == (pages, None)
+    # divergence inside page 2: two full pages + a 2-token partial
+    m, partial = cache.match(prompt[:10] + [99, 98])
+    assert m == pages[:2] and partial == (pages[2], 2)
+    # divergence inside page 0: nothing full, partial from the root
+    m, partial = cache.match([0, 1, 99, 98])
+    assert m == [] and partial == (pages[0], 2)
+    # a cold prompt misses entirely
+    assert cache.match([50, 51, 52, 53]) == ([], None)
+    # re-inserting the same prompt adds nothing and keeps incumbents
+    pool.admit(1, 12)
+    pool.ensure(1, 12)
+    assert cache.insert(prompt, pool.tables[1]) == 0
+    assert cache.match(prompt)[0] == pages
+    pool.check_conservation()
+
+
+def test_radix_eviction_lru_and_referenced_pages_pinned():
+    pool, cache = _pool_with_cache(n_pages=8, ps=4)
+    prompt_a = list(range(12))                # 3 pages
+    prompt_b = prompt_a[:4] + [90 + i for i in range(8)]  # shares page 0
+    pool.admit(0, 12)
+    pool.ensure(0, 12)
+    cache.insert(prompt_a, pool.tables[0])
+    pool.admit(1, 12)
+    pool.ensure(1, 12)
+    cache.insert(prompt_b, pool.tables[1])
+    b_leaf = int(pool.tables[1, 2])
+    # while the slots still map the pages nothing is evictable, and
+    # reclaim must not free a referenced page
+    assert cache.evictable() == 0
+    assert cache.reclaim(10) == 0
+    # slot 0 retires: a's two deep nodes become reclaimable, but the
+    # shared root stays pinned — slot 1 still maps descendants of it,
+    # and a pinned descendant blocks the whole ancestor chain
+    pool.release(0)
+    assert cache.evictable() == 2
+    pool.release(1)
+    assert pool.live_pages() == 0
+    # every node's subtree now holds only tree references, so the
+    # whole 5-node tree (shared page 0 + two 2-node branches) counts
+    # as cascade-reclaimable headroom
+    assert cache.evictable() == 5
+    assert pool.available() == len(pool.free) + 5
+    # LRU: touch branch a, then a single eviction takes b's tip
+    cache.match(prompt_a)
+    free0 = len(pool.free)
+    assert cache.reclaim(1) == 1
+    assert cache.evictions == 1
+    assert b_leaf in pool.free and len(pool.free) == free0 + 1
+    assert cache.match(prompt_a)[0] != []
+    # cascade: draining the rest frees every remaining node exactly once
+    assert cache.reclaim(10) == 4
+    assert cache.match(prompt_a) == ([], None)
+    assert len(pool.free) == pool.n_pages
+    pool.check_conservation()
+
+
+def test_pool_cow_private_copy_and_in_place():
+    pool, _ = _pool_with_cache(n_pages=6, ps=4)
+    pool.admit(0, 8)
+    pool.ensure(0, 8)
+    donor = [int(p) for p in pool.tables[0, :2]]
+    # slot 1 maps both donor pages, the tail COW-pending
+    pool.admit(1, 8)
+    pool.map_shared(1, donor[:1])
+    pool.map_shared(1, donor[1:], cow_tail=True)
+    assert pool.cow_idx[1] == 1
+    assert all(pool.refs[p] == 2 for p in donor)
+    # both mappers live: resolving COW draws a private page
+    src, dst = pool.cow(1, 1)
+    assert src == donor[1] and dst != src
+    assert pool.refs[src] == 1 and pool.refs[dst] == 1
+    assert int(pool.tables[1, 1]) == dst and pool.cow_idx[1] == -1
+    pool.check_conservation()
+    pool.release(1)
+    # sole-mapper case: slot 1 re-shares, slot 0 retires first, so the
+    # pending page has refcount 1 at resolution -> claimed in place
+    pool.admit(1, 8)
+    pool.map_shared(1, donor[:1])
+    pool.map_shared(1, [int(pool.tables[0, 1])], cow_tail=True)
+    pool.release(0)
+    free0 = len(pool.free)
+    src, dst = pool.cow(1, 1)
+    assert src == dst and len(pool.free) == free0
+    assert pool.cow_idx[1] == -1
+    pool.check_conservation()
+
+
+def test_prefix_cache_config_gates():
+    key = jax.random.PRNGKey(0)
+    cfg = REDUCED["deepseek-7b"]()
+    params, _ = lm.init_lm(key, cfg, dtype=jnp.float32)
+    # cache hits replay the suffix through the chunk program: without
+    # chunked prefill the feature cannot work, so it's a hard error
+    with pytest.raises(ValueError):
+        Engine(params, cfg, n_slots=2, max_len=64,
+               paging=PagingConfig(prefix_cache=True))
+    eng = Engine(params, cfg, n_slots=2, max_len=64,
+                 paging=PagingConfig(prefill_chunk=16, prefix_cache=True))
+    assert eng.prefix_cache is not None
+    assert eng.pool.reclaimer is eng.prefix_cache
+    # sliding-window archs silently opt out: a ring write through a
+    # shared page would clobber every other mapper's cached prefix
+    gcfg = REDUCED["gemma3-27b"]()
+    gparams, _ = lm.init_lm(jax.random.PRNGKey(1), gcfg,
+                            dtype=jnp.float32)
+    geng = Engine(gparams, gcfg, n_slots=2, max_len=64,
+                  paging=PagingConfig(prefill_chunk=16,
+                                      prefix_cache=True))
+    assert geng.prefix_cache is None
+
+
+# ----------------------------------------------------------------------
+# Full engine: parity, races, preemption, budget, eviction (slow)
+# ----------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = REDUCED["deepseek-7b"]()
+    params, _ = lm.init_lm(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    return params, cfg
+
+
+def _run(params, cfg, prompts, *, prefix, n_new=5, chunk=16, page_size=8,
+         max_len=96, n_slots=2, n_pages=0, patience=None, budget=0,
+         eng=None):
+    if eng is None:
+        eng = Engine(params, cfg, n_slots=n_slots, max_len=max_len,
+                     eos_id=-1,
+                     paging=PagingConfig(page_size=page_size,
+                                         n_pages=n_pages,
+                                         prefill_chunk=chunk,
+                                         prefix_cache=prefix,
+                                         prefill_token_budget=budget),
+                     preempt_patience=patience)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new=n_new))
+    done = eng.run()
+    return eng, {c.rid: c for c in done}
+
+
+def _drained(eng):
+    """Post-run conservation: no slot maps pages, only the tree holds
+    references, and free + referenced covers the whole pool."""
+    eng.pool.check_conservation()
+    assert eng.pool.live_pages() == 0
+    held = int((eng.pool.refs > 0).sum())
+    assert len(eng.pool.free) + held == eng.pool.n_pages
+
+
+@pytest.mark.slow
+def test_hit_miss_partial_cow_streams_bit_identical(small_lm):
+    """The acceptance matrix: a donor miss populates the tree, a full
+    hit maps every prompt page, a mid-page divergence takes the
+    partial-page COW path, an unrelated prompt misses cold, and an
+    exact resubmission of a fully cached page-aligned prompt demotes
+    its last page to COW (the hit is capped at plen-1 so at least one
+    suffix token runs). Every stream must equal the dense oracle and
+    the cache-off engine token for token."""
+    params, cfg = small_lm
+    key = jax.random.PRNGKey(3)
+    sys_p = jax.random.randint(key, (40,), 0, cfg.vocab)  # 5 full pages
+
+    def tail(i, n):
+        return jax.random.randint(jax.random.fold_in(key, i), (n,), 0,
+                                  cfg.vocab)
+
+    prompts = [
+        jnp.concatenate([sys_p, tail(1, 8)]),        # miss: the donor
+        jnp.concatenate([sys_p, tail(2, 8)]),        # full 40-token hit
+        jnp.concatenate([sys_p[:36], tail(3, 12)]),  # partial page: COW
+        tail(4, 24),                                 # cold miss
+        sys_p,                                       # capped hit: COW
+    ]
+    n_new = 5
+    eng_on, on = _run(params, cfg, prompts, prefix=True, n_new=n_new)
+    eng_off, off = _run(params, cfg, prompts, prefix=False, n_new=n_new)
+    assert sorted(on) == list(range(len(prompts)))
+    for i, p in enumerate(prompts):
+        want = manual_greedy(params, cfg, p, n_new, 96)
+        assert on[i].tokens == want, (i, on[i].tokens, want)
+        assert off[i].tokens == want, (i, off[i].tokens, want)
+    assert eng_on.stats["prefix_hits"] >= 2
+    assert eng_on.stats["prefix_hit_tokens"] >= 40
+    # at least one admission crossed the COW seam (private copy or
+    # in-place claim), and the cache-off engine crossed none
+    assert (eng_on.stats["cow_copies"]
+            + eng_on.stats["cow_in_place"]) >= 1
+    assert eng_off.stats["prefix_hits"] == 0
+    assert eng_off.stats["cow_copies"] == 0
+    # queue wait is a prefix of TTFT, never larger
+    for c in on.values():
+        assert 0.0 <= c.queue_s <= c.ttft_s + 1e-9
+    # suffix chunks stay on the ladder at or below the chunk size
+    assert all(s <= 16 for s in eng_on._chunk_shapes)
+    _drained(eng_on)
+
+
+@pytest.mark.slow
+def test_duplicate_prompt_same_step_defers_then_shares(small_lm):
+    """The admission race: two identical prompts in the queue the same
+    step. The second must NOT recompute a private copy in parallel —
+    it defers until the first activates, then admits as a hit on the
+    pages the first just inserted."""
+    params, cfg = small_lm
+    p = jax.random.randint(jax.random.PRNGKey(7), (40,), 0, cfg.vocab)
+    eng, by_rid = _run(params, cfg, [p, p], prefix=True, n_new=4)
+    want = manual_greedy(params, cfg, p, 4, 96)
+    assert by_rid[0].tokens == want
+    assert by_rid[1].tokens == want
+    assert eng.stats["share_deferrals"] >= 1
+    assert eng.stats["prefix_hits"] == 1
+    assert eng.stats["prefix_hit_tokens"] >= 32
+    _drained(eng)
+
+
+@pytest.mark.slow
+def test_preempt_resume_of_cache_hit_slot(small_lm):
+    """Pool-pressure preemption of slots admitted through the hit path:
+    release derefs the shared pages (the tree keeps them alive), the
+    victim re-enqueues, re-matches the same pages on re-admission, and
+    its final greedy stream is still bit-identical."""
+    params, cfg = small_lm
+    key = jax.random.PRNGKey(9)
+    base = jax.random.randint(key, (8,), 0, cfg.vocab)   # one full page
+    eng = Engine(params, cfg, n_slots=2, max_len=32, eos_id=-1,
+                 paging=PagingConfig(page_size=8, n_pages=6,
+                                     prefill_chunk=16, prefix_cache=True),
+                 preempt_patience=2)
+    # warm the tree with a donor, then drain it
+    eng.submit(Request(rid=10, prompt=base, max_new=1))
+    eng.run()
+    eng.completed.clear()
+    assert eng.prefix_cache.match(base)[0] != []
+    # worst = plen + 7 <= 18 -> 3 pages each; page 0 shared via the
+    # tree, so two residents hold 5 unique pages of 6 and rid 2 starves
+    # at the head until patience preempts the youngest resident
+    plens = [9, 10, 11]
+    prompts = [jnp.concatenate([base, jax.random.randint(
+        jax.random.fold_in(key, i), (n - 8,), 0, cfg.vocab)])
+        for i, n in enumerate(plens)]
+    n_new = 8
+    _, by_rid = _run(params, cfg, prompts, prefix=True, n_new=n_new,
+                     eng=eng)
+    assert eng.stats["preemptions"] >= 1
+    assert eng.stats["prefix_hits"] >= 3     # victim re-hits on resume
+    assert sorted(by_rid) == [0, 1, 2]
+    for rid, c in by_rid.items():
+        assert c.status == "ok", (rid, c.status)
+        want = manual_greedy(params, cfg, prompts[rid], n_new, 32)
+        assert c.tokens == want, (rid, c.tokens, want)
+    _drained(eng)
+
+
+@pytest.mark.slow
+def test_prefill_token_budget_defers_chunks_not_tokens(small_lm):
+    """Sarathi-style budget: with two 48-token prompts chunking
+    concurrently and a 16-token/step cap, younger slots defer chunks
+    (the oldest always advances, so no starvation) — and the streams
+    are unchanged."""
+    params, cfg = small_lm
+    key = jax.random.PRNGKey(11)
+    prompts = [jax.random.randint(jax.random.fold_in(key, i), (48,), 0,
+                                  cfg.vocab) for i in range(2)]
+    n_new = 4
+    eng, by_rid = _run(params, cfg, prompts, prefix=True, n_new=n_new,
+                       budget=16)
+    for i, p in enumerate(prompts):
+        want = manual_greedy(params, cfg, p, n_new, 96)
+        assert by_rid[i].tokens == want, (i, by_rid[i].tokens, want)
+    assert eng.stats["budget_deferred_chunks"] >= 1
+    _drained(eng)
+
+
+@pytest.mark.slow
+def test_tree_eviction_under_pool_pressure(small_lm):
+    """Six disjoint prompts through a pool that cannot hold the tree
+    and two residents at once: admission reclaims LRU branches instead
+    of deadlocking, every request completes, and the allocator stays
+    conserved."""
+    params, cfg = small_lm
+    key = jax.random.PRNGKey(13)
+    prompts = [jax.random.randint(jax.random.fold_in(key, i), (32,), 0,
+                                  cfg.vocab) for i in range(6)]
+    eng, by_rid = _run(params, cfg, prompts, prefix=True, n_new=4,
+                       page_size=8, n_pages=10, max_len=48, n_slots=2)
+    assert sorted(by_rid) == list(range(6))
+    assert all(c.status == "ok" for c in by_rid.values())
+    for i, p in enumerate(prompts):
+        want = manual_greedy(params, cfg, p, 4, 48)
+        assert by_rid[i].tokens == want, (i, by_rid[i].tokens, want)
+    assert eng.prefix_cache.evictions > 0
+    _drained(eng)

@@ -208,6 +208,134 @@ def test_page_pool_invariants(data):
     assert admitted == list(range(len(admitted)))
 
 
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_page_pool_refcount_invariants(data):
+    """Random shared-page traffic (PR 8) against the refcounted pool:
+    admissions, prefix-style ``map_shared`` grafts (with and without a
+    COW-pending tail), COW resolutions, tree-style adopt/drop
+    references, releases, and transaction brackets. Invariants after
+    every operation (via ``check_conservation`` plus local asserts):
+
+      * refcount conservation — free + referenced == total pages, a
+        page's table multiplicity never exceeds its refcount, and no
+        free page keeps a reference;
+      * COW on a sole-referenced page claims it in place — no draw,
+        no free-list change; COW on a shared page draws exactly one
+        private page and leaves both sides at the right counts;
+      * ``deref`` frees a page exactly when the last reference goes —
+        an extant reference (tree or table) always pins it;
+      * rollback restores refcounts and COW-pending marks exactly.
+    """
+    n_slots = data.draw(st.integers(2, 4), label="n_slots")
+    page_size = 4
+    max_pages = data.draw(st.integers(2, 5), label="max_pages")
+    n_pages = data.draw(st.integers(2, n_slots * max_pages),
+                        label="n_pages")
+    pool = PagePool(n_pages, page_size, n_slots, max_pages)
+    live: set = set()
+    adopted: list = []                    # "tree" references we hold
+    stack = []                            # model snapshots per begin()
+    ops = data.draw(st.lists(
+        st.sampled_from(["admit", "share", "cow", "adopt", "drop",
+                         "release", "begin", "commit", "rollback"]),
+        min_size=1, max_size=60), label="ops")
+    for op in ops:
+        if op == "admit":
+            free_slots = [s for s in range(n_slots) if s not in live]
+            if free_slots:
+                ln = data.draw(st.integers(1, max_pages * page_size))
+                if pool.can_admit(ln):
+                    slot = free_slots[0]
+                    pool.admit(slot, ln)
+                    pool.ensure(slot, data.draw(st.integers(1, ln)))
+                    live.add(slot)
+        elif op == "share":
+            # graft a donor's leading pages into a fresh slot, engine
+            # style: reserve first, then map; optionally COW-pending
+            free_slots = [s for s in range(n_slots) if s not in live]
+            donors = [s for s in live if pool.n_alloc[s] >= 1]
+            if free_slots and donors:
+                donor = data.draw(st.sampled_from(sorted(donors)))
+                k = data.draw(st.integers(1, int(pool.n_alloc[donor])))
+                if pool.can_admit_pages(k):
+                    slot = free_slots[0]
+                    pages = [int(p) for p in pool.tables[donor, :k]]
+                    before = pool.refs[pages].copy()
+                    pool.admit(slot, k * page_size)
+                    cow = data.draw(st.booleans(), label="cow_tail")
+                    pool.map_shared(slot, pages[:-1])
+                    pool.map_shared(slot, pages[-1:], cow_tail=cow)
+                    live.add(slot)
+                    assert (pool.refs[pages] == before + 1).all()
+                    assert pool.cow_idx[slot] == (k - 1 if cow else -1)
+        elif op == "cow":
+            slots = [s for s in live if pool.cow_idx[s] >= 0]
+            if slots:
+                slot = data.draw(st.sampled_from(sorted(slots)))
+                logical = int(pool.cow_idx[slot])
+                page = int(pool.tables[slot, logical])
+                shared = pool.refs[page] > 1
+                if shared and not pool.free:
+                    continue              # engine's _make_room ran out
+                free0 = len(pool.free)
+                src, dst = pool.cow(slot, logical)
+                assert src == page and pool.cow_idx[slot] == -1
+                if shared:
+                    # private copy: one draw, both sides refcount 1 side
+                    assert dst != src and len(pool.free) == free0 - 1
+                    assert pool.refs[dst] == 1
+                    assert int(pool.tables[slot, logical]) == dst
+                else:
+                    # sole reference: claimed in place, no draw
+                    assert dst == src and len(pool.free) == free0
+        elif op == "adopt":
+            granted = [int(p) for s in live
+                       for p in pool.tables[s, :pool.n_alloc[s]]]
+            if granted:
+                page = data.draw(st.sampled_from(sorted(set(granted))))
+                pool.ref_page(page)
+                adopted.append(page)
+        elif op == "drop" and adopted:
+            page = adopted.pop(data.draw(
+                st.integers(0, len(adopted) - 1)))
+            was = int(pool.refs[page])
+            freed = pool.deref(page)
+            # freed exactly when the last reference went
+            assert freed == (was == 1)
+            assert (page in pool.free) == freed
+        elif op == "release" and live:
+            slot = data.draw(st.sampled_from(sorted(live)))
+            pool.release(slot)
+            live.discard(slot)
+            assert pool.cow_idx[slot] == -1
+        elif op == "begin":
+            pool.begin()
+            stack.append((set(live), list(adopted), pool.refs.copy(),
+                          pool.cow_idx.copy()))
+        elif op == "commit" and stack:
+            pool.commit()
+            stack.pop()
+        elif op == "rollback" and stack:
+            pool.rollback()
+            live, adopted, refs0, cow0 = stack.pop()
+            live, adopted = set(live), list(adopted)
+            assert (pool.refs == refs0).all()
+            assert (pool.cow_idx == cow0).all()
+        pool.check_conservation()
+        # an extant reference always pins its page off the free list
+        for page in adopted:
+            assert pool.refs[page] >= 1 and page not in pool.free
+    while pool.in_transaction():
+        pool.commit()
+    for slot in sorted(live):
+        pool.release(slot)
+    while adopted:
+        pool.deref(adopted.pop())
+    pool.check_conservation()
+    assert sorted(pool.free) == list(range(n_pages))
+
+
 @settings(max_examples=15, deadline=None)
 @given(st.integers(0, 2**31 - 1))
 def test_grad_clip_norm_bound(seed):
