@@ -28,6 +28,7 @@ REQUIRED = {
                        "config"),
     "BENCH_PR8.json": ("hit_rate", "flops", "live_pages", "ttft",
                        "parity", "compiles", "config"),
+    "BENCH_PR9.json": ("passes", "compiles", "config"),
 }
 
 

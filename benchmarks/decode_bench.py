@@ -25,47 +25,13 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import min_weight_bytes, weight_concat_eqns
 from repro.configs import REDUCED
 from repro.configs.deepseek_7b import CONFIG as DEEPSEEK_FULL
 from repro.core.block_traffic import decode_weight_traffic_cfg
 from repro.models import lm
 
 N_SLOTS = 4
-
-
-def weight_concat_eqns(jaxpr_like, min_bytes: int):
-    """Walk a (closed) jaxpr recursively and return the output avals of
-    every ``concatenate`` whose result is at least ``min_bytes`` — the
-    signature of a per-call projection-weight fuse. Activation-sized
-    concats (rope rotations, conv states) stay below any projection
-    panel's size."""
-    found = []
-    seen = set()
-
-    def walk(jaxpr):
-        if id(jaxpr) in seen:
-            return
-        seen.add(id(jaxpr))
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "concatenate":
-                aval = eqn.outvars[0].aval
-                if aval.size * aval.dtype.itemsize >= min_bytes:
-                    found.append(aval)
-            for v in eqn.params.values():
-                for j in (v if isinstance(v, (tuple, list)) else (v,)):
-                    if hasattr(j, "eqns"):              # Jaxpr
-                        walk(j)
-                    elif hasattr(j, "jaxpr"):           # ClosedJaxpr
-                        walk(j.jaxpr)
-
-    walk(jaxpr_like.jaxpr if hasattr(jaxpr_like, "jaxpr") else jaxpr_like)
-    return found
-
-
-def min_weight_bytes(cfg, itemsize: int = 4) -> int:
-    """Size of the smallest seed-layout projection leaf (d x Hkv*hd) —
-    the audit threshold: any concat at least this large is weight-sized."""
-    return cfg.d_model * cfg.n_kv_heads * cfg.head_dim * itemsize
 
 
 def _traffic_section():

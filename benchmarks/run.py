@@ -5,7 +5,8 @@ block-pipeline artifact (BENCH_PR2.json), the PR 3 paged-serving
 artifact (BENCH_PR3.json), the PR 4 decode weight-traffic artifact
 (BENCH_PR4.json), the PR 5 chunked-prefill TTFT artifact
 (BENCH_PR5.json), the PR 7 preemption-pressure artifact
-(BENCH_PR7.json), the PR 8 prefix-cache artifact (BENCH_PR8.json)
+(BENCH_PR7.json), the PR 8 prefix-cache artifact (BENCH_PR8.json),
+the PR 9 static-auditor artifact (BENCH_PR9.json)
 and the PR 6 tensor-parallel artifact
 (BENCH_PR6.json — run as a subprocess: the emulated mesh needs
 XLA_FLAGS set before jax initialises, which has already happened in
@@ -19,6 +20,7 @@ import sys
 
 
 def main() -> None:
+    from benchmarks.analysis_bench import analysis_bench
     from benchmarks.block_bench import block_bench
     from benchmarks.decode_bench import decode_bench
     from benchmarks.kernel_bench import kernel_suite
@@ -45,6 +47,7 @@ def main() -> None:
     chunked_prefill_bench(emit, json_path="BENCH_PR5.json")
     preemption_bench(emit, json_path="BENCH_PR7.json")
     prefix_cache_bench(emit, json_path="BENCH_PR8.json")
+    analysis_bench(emit, json_path="BENCH_PR9.json")
     sys.stdout.flush()
     tp = subprocess.run(
         [sys.executable,

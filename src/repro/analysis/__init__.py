@@ -1,0 +1,29 @@
+"""Static invariant auditor (DESIGN.md §9).
+
+Five passes prove the serving stack's execution contract from traced
+jaxprs and source ASTs, without running anything:
+
+  * :mod:`repro.analysis.sync` — one device fetch per step-loop phase,
+    no hidden host<->device synchronisation (RWA1xx);
+  * :mod:`repro.analysis.donation` — donated buffers alias outputs in
+    the lowered MLIR (RWA2xx);
+  * :mod:`repro.analysis.compile_bound` — closed-form enumeration of
+    the reachable shape-signature set vs the documented bound (RWA3xx);
+  * :mod:`repro.analysis.vmem` — per-``pallas_call`` VMEM residency vs
+    the planner's budget (RWA4xx);
+  * :mod:`repro.analysis.rules` — PagePool transaction discipline and
+    decode-path hygiene (RWA5xx).
+
+CLI: ``python -m repro.analysis.audit`` (gating CI tier).
+"""
+from repro.analysis.jaxprs import (callback_eqns, count_primitive,
+                                   iter_eqns, min_weight_bytes,
+                                   primitive_eqns, weak_type_invars,
+                                   weight_concat_eqns)
+from repro.analysis.report import CODES, Diagnostic, PassResult
+
+__all__ = [
+    "CODES", "Diagnostic", "PassResult", "callback_eqns",
+    "count_primitive", "iter_eqns", "min_weight_bytes",
+    "primitive_eqns", "weak_type_invars", "weight_concat_eqns",
+]

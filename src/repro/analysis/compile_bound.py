@@ -1,0 +1,199 @@
+"""Compile-bound enumeration pass: a closed-form proof of the engine's
+jit-cache bound, replacing trust in runtime counters.
+
+The serving contract (DESIGN.md §4/§7) bounds the compiled programs per
+placement at::
+
+    n_buckets  +  n_chunk_shapes  +  n_step_widths
+    (prefill)     (chunked prefill)  (decode; 1, or the pow2 ladder
+                                      under table-width bucketing)
+
+This module *enumerates* the reachable shape-signature sets from a
+:class:`~repro.core.types.PagingConfig` alone — no tracing, no engine —
+by replaying the same host-side decisions the engine makes
+(``bucket_for``, ``chunk_schedule``, ``_table_width``). Because both
+sides derive from ``serve.paging``, the enumeration and the runtime can
+only disagree if someone adds a new shape source to the engine — which
+is exactly the event the audit exists to catch.
+
+Two consumers:
+
+  * :func:`enumerate_programs` + :func:`audit_bound` — static: assert
+    the enumerated set equals the documented bound, per placement.
+  * :func:`predict_compile_counts` + :func:`check_engine_counts` —
+    workload-level: given concrete prompt lengths, predict the *exact*
+    per-entry-point program counts a fault-free run compiles, and match
+    them against ``Engine.compile_counts()`` (jit-cache ground truth).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Optional, Sequence, Tuple
+
+from repro.analysis.report import Diagnostic, PassResult
+from repro.serve.paging import bucket_for, chunk_schedule, default_buckets
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _width_for(hi: int, max_pages: int) -> int:
+    """Mirror of ``Engine._table_width`` for ``hi`` live pages."""
+    width = 1 if hi <= 1 else 1 << (hi - 1).bit_length()
+    return min(width, max_pages)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramInventory:
+    """The reachable shape-signature set of one engine configuration.
+    One compiled program per element, per placement."""
+    prefill_lens: Tuple[int, ...]    # padded one-shot prefill lengths
+    chunk_shapes: Tuple[int, ...]    # chunk panel widths
+    step_widths: Tuple[int, ...]     # decode block-table widths
+
+    @property
+    def bound(self) -> int:
+        return (len(self.prefill_lens) + len(self.chunk_shapes)
+                + len(self.step_widths))
+
+
+def enumerate_programs(*, max_len: int, page_size: int,
+                       prefill_chunk: int = 0, min_bucket: int = 16,
+                       buckets: Optional[Sequence[int]] = None,
+                       table_width_bucketing: bool = False,
+                       bucketing: bool = True) -> ProgramInventory:
+    """Statically enumerate every shape signature the engine can hand
+    its three jitted entry points. ``bucketing=False`` models the
+    recurrent/MoE exact-length prefill archs, whose prefill set is the
+    (unbounded) set of submitted lengths — represented as empty here;
+    only the decode side stays provable for them."""
+    if bucketing:
+        ladder = tuple(sorted(buckets)) if buckets is not None \
+            else tuple(default_buckets(max_len, min_bucket))
+    else:
+        ladder = ()
+    chunks = tuple(b for b in ladder if prefill_chunk
+                   and b <= prefill_chunk)
+    max_pages = _ceil_div(max_len, page_size)
+    if table_width_bucketing:
+        widths = tuple(sorted({_width_for(hi, max_pages)
+                               for hi in range(max_pages + 1)}))
+    else:
+        widths = (max_pages,)
+    return ProgramInventory(prefill_lens=ladder, chunk_shapes=chunks,
+                            step_widths=widths)
+
+
+def audit_bound(inv: ProgramInventory, *, n_buckets: int,
+                n_chunk_shapes: int, max_pages: int,
+                table_width_bucketing: bool = False,
+                name: str = "engine") -> PassResult:
+    """Check the enumeration against the documented closed form:
+    ``n_buckets + n_chunk_shapes + 1`` decode programs, the +1 growing
+    to the ``log2(max_pages)+1``-entry pow2 width ladder under
+    table-width bucketing (DESIGN.md §7)."""
+    result = PassResult(name="compile-bound")
+    result.checked = 3
+    if len(inv.prefill_lens) != n_buckets:
+        result.diagnostics.append(Diagnostic(
+            code="RWA301", path=name,
+            message=f"{len(inv.prefill_lens)} reachable prefill shapes, "
+                    f"documented bound is n_buckets={n_buckets}"))
+    if len(inv.chunk_shapes) != n_chunk_shapes:
+        result.diagnostics.append(Diagnostic(
+            code="RWA301", path=name,
+            message=f"{len(inv.chunk_shapes)} reachable chunk shapes, "
+                    f"documented bound is {n_chunk_shapes}"))
+    if table_width_bucketing:
+        # ladder entries: widths 1, 2, 4, ..., capped at max_pages —
+        # at most log2(max_pages) + 2 and at least 2 for max_pages > 1
+        cap = (max_pages - 1).bit_length() + 2 if max_pages > 1 else 1
+        ok = 1 <= len(inv.step_widths) <= cap and \
+            inv.step_widths[-1] == max_pages
+        if not ok:
+            result.diagnostics.append(Diagnostic(
+                code="RWA301", path=name,
+                message=f"step-width ladder {inv.step_widths} escapes "
+                        f"the log2(max_pages)+1 bound (max_pages="
+                        f"{max_pages})"))
+    elif inv.step_widths != (max_pages,):
+        result.diagnostics.append(Diagnostic(
+            code="RWA301", path=name,
+            message=f"decode widths {inv.step_widths}: exactly one "
+                    "program (full table width) is documented"))
+    return result
+
+
+def predict_compile_counts(prompt_lens: Iterable[int], *, max_len: int,
+                           prefill_chunk: int = 0,
+                           min_bucket: int = 16,
+                           buckets: Optional[Sequence[int]] = None,
+                           bucketing: bool = True,
+                           decode_steps: bool = True) -> Dict[str, int]:
+    """Exact per-entry-point program counts a fault-free, prefix-cache-
+    free run over ``prompt_lens`` compiles: each prompt either pads to
+    its bucket (one-shot prefill) or splits into ``chunk_schedule``
+    panels; decode compiles one program when any decode step runs."""
+    ladder = (sorted(buckets) if buckets is not None
+              else default_buckets(max_len, min_bucket)) if bucketing \
+        else None
+    prefill, chunks = set(), set()
+    for plen in prompt_lens:
+        if prefill_chunk and plen > prefill_chunk:
+            for _, _, shape in chunk_schedule(plen, prefill_chunk,
+                                              ladder):
+                chunks.add(shape)
+        elif ladder is not None:
+            prefill.add(bucket_for(plen, ladder))
+        else:
+            prefill.add(plen)
+    return {"prefill": len(prefill), "chunk": len(chunks),
+            "step": 1 if decode_steps else 0}
+
+
+def check_engine_counts(engine, expected: Dict[str, int],
+                        name: str = "engine") -> PassResult:
+    """Match ``Engine.compile_counts()`` (jit-cache ground truth) and
+    the host-side proxies against a static prediction. Any drift means
+    a shape source the enumeration does not model — the exact failure
+    mode that silently multiplies compile time."""
+    result = PassResult(name="compile-bound")
+    actual = engine.compile_counts()
+    proxies = {"prefill": len(engine._prefill_lens),
+               "chunk": len(engine._chunk_shapes),
+               "step": len(engine._step_widths)}
+    for kind in ("prefill", "chunk", "step"):
+        result.checked += 1
+        if actual[kind] != expected[kind]:
+            result.diagnostics.append(Diagnostic(
+                code="RWA303", path=name,
+                message=f"{kind}: jit cache compiled {actual[kind]} "
+                        f"program(s), static enumeration predicts "
+                        f"{expected[kind]}"))
+        if proxies[kind] != actual[kind]:
+            result.diagnostics.append(Diagnostic(
+                code="RWA303", path=name,
+                message=f"{kind}: host proxy saw {proxies[kind]} "
+                        f"shape(s) but the jit cache holds "
+                        f"{actual[kind]} — a hidden operand is "
+                        "fragmenting the cache"))
+    return result
+
+
+def weak_type_audit(entries) -> PassResult:
+    """Flag weak_type invars on traced entry points: a Python-scalar
+    operand compiles one program now and a second the moment a
+    strongly-typed value of the same shape arrives (RWA302)."""
+    from repro.analysis import jaxprs as jxp
+    result = PassResult(name="compile-bound")
+    for name, jaxpr in entries:
+        result.checked += 1
+        weak = jxp.weak_type_invars(jaxpr)
+        if weak:
+            result.diagnostics.append(Diagnostic(
+                code="RWA302", path=name,
+                message=f"{len(weak)} weak_type invar(s) "
+                        f"(e.g. {weak[0].aval}): pass jnp.int32/"
+                        "jnp.float32-typed operands"))
+    return result

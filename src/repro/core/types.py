@@ -271,7 +271,7 @@ class ModelConfig:
             active += embed
         if self.encdec:
             for stage in self.enc_stages():
-                for blk in stage.body:
+                for _blk in stage.body:
                     p = attn_params() + mlp_params(self.d_ff) + 3 * d
                     total += stage.repeat * p
                     active += stage.repeat * p

@@ -276,5 +276,4 @@ def patch_embed(img, w, b=None, *, patch: int = 4,
     x = img.reshape(bsz, gh, patch, gw, patch, c)
     x = x.transpose(0, 1, 3, 2, 4, 5).reshape(bsz, gh, gw,
                                               patch * patch * c)
-    out = matmul(x, w, bias=b, impl=impl)
-    return out
+    return matmul(x, w, bias=b, impl=impl)

@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
 Proves the distribution config is coherent without hardware: builds the
@@ -15,6 +12,11 @@ Usage:
   python -m repro.launch.dryrun --arch gemma3-27b --shape long_500k \
       --rules kv_seq=model,kv_heads=data
 """
+import os
+
+# must land before the jax import below initialises the backend
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
 import argparse
 import json
 import time

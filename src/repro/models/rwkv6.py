@@ -145,8 +145,7 @@ def wkv_ref(r, k, v, lw, u, s0=None):
 
 def _token_shift(x, x_prev_last):
     """x_{t-1} stream: shift right; position 0 uses carried state."""
-    prev = jnp.concatenate([x_prev_last[:, None], x[:, :-1]], axis=1)
-    return prev
+    return jnp.concatenate([x_prev_last[:, None], x[:, :-1]], axis=1)
 
 
 def apply(params, x, *, cfg: ModelConfig, state: Optional[dict] = None):

@@ -81,7 +81,7 @@ def init_swin(key, cfg: SwinConfig, dtype=jnp.float32):
     c = d
     for si, (depth, heads) in enumerate(zip(cfg.depths, cfg.num_heads)):
         stage = {"blocks": []}
-        for bi in range(depth):
+        for _bi in range(depth):
             blk = {
                 "ln1_g": jnp.ones((c,), dtype), "ln1_b": jnp.zeros((c,), dtype),
                 "qkv": _w(next(ks), c, 3 * c, dtype),
@@ -198,7 +198,7 @@ def swin_forward(params, images, cfg: SwinConfig):
                         patch=cfg.patch)          # (B, H/4, W/4, D)
     rel_idx = _rel_pos_index(w)
     fuse = runtime.pipeline_fusion()
-    for si, (depth, heads) in enumerate(zip(cfg.depths, cfg.num_heads)):
+    for si, (_depth, heads) in enumerate(zip(cfg.depths, cfg.num_heads)):
         stage = params["stages"][si]
         b, h, wd, c = x.shape
         mask = _shift_mask(h, wd, w, w // 2) if h > w else None

@@ -102,7 +102,16 @@ TERMINAL_STATUSES = ("ok", "eos", "length", "deadline", "cancelled",
 @dataclasses.dataclass
 class Request:
     rid: int
-    prompt: jnp.ndarray              # (S,) int32
+    prompt: np.ndarray               # (S,) int32 — host-resident.
+    #                                  submit() accepts a jnp array and
+    #                                  normalises it to numpy ONCE at
+    #                                  the host boundary; admission and
+    #                                  resume then slice it sync-free
+    #                                  (the auditor's RWA103 caught the
+    #                                  old per-admission np.asarray on
+    #                                  a device prompt: a hidden
+    #                                  device->host transfer every time
+    #                                  a blocked queue head retried)
     max_new: int = 32
     temperature: Optional[float] = None   # None => engine default
     deadline_s: Optional[float] = None    # seconds after submission by
@@ -390,6 +399,11 @@ class Engine:
                                    dtype=self.cache_dtype)
 
     def submit(self, req: Request):
+        if not isinstance(req.prompt, np.ndarray):
+            # the one sanctioned device->host transfer for a prompt:
+            # once per submission, never per admission attempt
+            req = dataclasses.replace(
+                req, prompt=np.asarray(req.prompt, np.int32))
         plen = int(req.prompt.shape[0])
         if not 0 < plen <= self.max_len:
             raise ValueError(f"prompt of length {plen} cannot decode "
@@ -415,6 +429,39 @@ class Engine:
         return {"prefill": n(self._admit, len(self._prefill_lens)),
                 "chunk": n(self._chunk, len(self._chunk_shapes)),
                 "step": n(self._step, len(self._step_widths))}
+
+    def audit_entry_points(self):
+        """The three jitted entry points with representative arguments,
+        shaped exactly as the run loop passes them — for the static
+        auditor (repro.analysis), which lowers and traces these without
+        executing anything. Each entry is ``(name, fn, args,
+        donate_argnums)``; the donated cache is only annotated by
+        ``lower``/``make_jaxpr``, never consumed."""
+        key = jax.random.PRNGKey(0)
+        row = jnp.asarray(self.pool.tables[0])
+        off = np.zeros((self.n_slots,), bool)
+        entries = [
+            ("step", self._step,
+             (self.params, self.cache, self._last, self.lengths,
+              self._tables_dev, self._temps, jnp.asarray(off),
+              jnp.asarray(off), key), (1,)),
+        ]
+        bl = self.buckets[0] if self.buckets else min(8, self.max_len)
+        entries.append(
+            ("prefill", self._admit,
+             (self.params, self.cache, self.lengths, self._last,
+              jnp.zeros((1, bl), jnp.int32), jnp.int32(0), row,
+              jnp.int32(bl), jnp.float32(self.temperature), key), (1,)))
+        if self.prefill_chunk:
+            c = self.prefill_chunk
+            entries.append(
+                ("chunk", self._chunk,
+                 (self.params, self.cache, jnp.zeros((1, c), jnp.int32),
+                  jnp.int32(0), jnp.int32(c), jnp.int32(0), row,
+                  self.lengths, self._last,
+                  jnp.float32(self.temperature), key,
+                  jnp.int32(0), jnp.int32(0)), (1,)))
+        return entries
 
     def _req_temp(self, req: Request) -> float:
         return self.temperature if req.temperature is None else \

@@ -1,0 +1,375 @@
+"""Seeded-violation fixtures for the static invariant auditor.
+
+Every pass gets the same treatment: a fixture that MUST fire with its
+documented RWA code, and clean code (a minimal snippet plus the shipped
+serving modules) that MUST stay quiet. The pair is what makes a green
+`python -m repro.analysis.audit` meaningful — a pass that cannot fail
+proves nothing.
+"""
+import dataclasses
+import os
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (compile_bound, donation, rules, sync, vmem)
+from repro.analysis.audit import (ENGINE_SYNC_ALLOW, RULE_MODULES,
+                                  SERVE_DIR_MODULES)
+from repro.analysis.report import CODES, Diagnostic, PassResult
+from repro.core.rowwise import plan_matmul
+from repro.kernels import ops
+
+jax.config.update("jax_enable_x64", False)
+
+SERVE_DIR = os.path.join(os.path.dirname(os.path.abspath(sync.__file__)),
+                         os.pardir, "serve")
+
+
+def _codes(result: PassResult):
+    return sorted({d.code for d in result.diagnostics})
+
+
+def _sync(src, **kw):
+    return sync.audit_source(textwrap.dedent(src), path="fixture.py",
+                             **kw)
+
+
+def _rules(src, **kw):
+    return rules.audit_source(textwrap.dedent(src), path="fixture.py",
+                              **kw)
+
+
+# ---------------------------------------------------------------- report
+
+def test_diagnostic_rejects_unregistered_code():
+    with pytest.raises(AssertionError):
+        Diagnostic(code="RWA999", message="no such rule", path="x",
+                   line=1)
+
+
+def test_pass_result_ok_tracks_error_severity():
+    res = PassResult(name="sync")
+    assert res.ok
+    res.diagnostics.append(Diagnostic(code="RWA101", message="m",
+                                      path="x", line=1))
+    assert not res.ok and len(res.errors()) == 1
+    assert "RWA101" in str(res.errors()[0])
+    assert set(CODES) >= {d.code for d in res.diagnostics}
+
+
+# ------------------------------------------------------------- sync pass
+
+def test_sync_item_on_device_value_fires():
+    res = _sync("""
+        import jax.numpy as jnp
+
+        def bad(x):
+            y = jnp.sum(x)
+            return y.item()
+    """)
+    assert _codes(res) == ["RWA101"]
+
+
+def test_sync_float_cast_fires():
+    res = _sync("""
+        import jax.numpy as jnp
+
+        def bad(x):
+            return float(jnp.mean(x))
+    """)
+    assert "RWA102" in _codes(res)
+
+
+def test_sync_np_asarray_on_device_value_fires():
+    res = _sync("""
+        import jax.numpy as jnp
+        import numpy as np
+
+        def bad(a, b):
+            y = jnp.dot(a, b)
+            return np.asarray(y)
+    """)
+    assert "RWA103" in _codes(res)
+
+
+def test_sync_taint_flows_through_unknown_calls():
+    # helper(y) is opaque: its result must stay tainted, so the cast
+    # two hops away from the producer still fires
+    res = _sync("""
+        import jax.numpy as jnp
+
+        def bad(x, helper):
+            y = jnp.sum(x)
+            z = helper(y)
+            return int(z)
+    """)
+    assert "RWA102" in _codes(res)
+
+
+def test_sync_metadata_reads_are_not_syncs():
+    res = _sync("""
+        import jax.numpy as jnp
+
+        def ok(x):
+            y = jnp.sum(x)
+            n = y.shape[0]
+            return int(n) + int(y.ndim)
+    """)
+    assert res.ok and res.checked > 0
+
+
+def test_sync_device_get_needs_allowlist():
+    src = """
+        import jax
+
+        def fetch(x):
+            return jax.device_get(x)
+    """
+    assert _codes(_sync(src)) == ["RWA104"]
+    allowed = sync.SyncPolicy(device_get_allow={"fetch": 1})
+    assert _sync(src, policy=allowed).ok
+
+
+def test_sync_block_until_ready_fires():
+    res = _sync("""
+        import jax.numpy as jnp
+
+        def bad(a, b):
+            y = jnp.dot(a, b)
+            return y.block_until_ready()
+    """)
+    assert "RWA105" in _codes(res)
+
+
+def test_sync_entry_jaxpr_callback_fires():
+    def with_cb(x):
+        return jax.pure_callback(
+            np.sin, jax.ShapeDtypeStruct(x.shape, x.dtype), x)
+
+    dirty = jax.make_jaxpr(with_cb)(jnp.ones(4))
+    clean = jax.make_jaxpr(jnp.sin)(jnp.ones(4))
+    res = sync.audit_entry_jaxprs([("dirty", dirty)])
+    assert _codes(res) == ["RWA106"]
+    assert sync.audit_entry_jaxprs([("clean", clean)]).ok
+
+
+def test_shipped_serve_modules_sync_clean():
+    """The regression half of the PR-9 fix: `submit()` owns the one
+    prompt normalisation, so no serve module hides a per-step sync."""
+    policy = sync.SyncPolicy(device_get_allow=dict(ENGINE_SYNC_ALLOW))
+    for mod in SERVE_DIR_MODULES:
+        res = sync.audit_file(os.path.join(SERVE_DIR, mod),
+                              policy=policy)
+        assert res.ok, f"{mod}: {[str(d) for d in res.errors()]}"
+        assert res.checked > 0
+
+
+# --------------------------------------------------------- donation pass
+
+def test_donation_dropped_alias_fires():
+    # b's only output is a scalar reduction: XLA cannot alias the
+    # donated (8,) buffer anywhere, silently copies it, and the only
+    # runtime trace is a UserWarning — exactly what the pass catches
+    bad = jax.jit(lambda a, b: (a + 1.0, b.sum()), donate_argnums=(1,))
+    args = (jnp.ones((4,), jnp.float32), jnp.ones((8,), jnp.float32))
+    res = donation.audit_donation(bad, args, (1,), name="bad")
+    assert "RWA201" in _codes(res) and "RWA202" in _codes(res)
+
+
+def test_donation_aligned_buffer_clean():
+    good = jax.jit(lambda a, b: (a + 1.0, b * 2.0), donate_argnums=(1,))
+    args = (jnp.ones((4,), jnp.float32), jnp.ones((8,), jnp.float32))
+    res = donation.audit_donation(good, args, (1,), name="good")
+    assert res.ok and res.checked == 1
+
+
+# ------------------------------------------------------------ rules pass
+
+def test_rules_unpaired_begin_fires():
+    res = _rules("""
+        def leak(pool, slot):
+            pool.begin()
+            pool.admit(slot, 1)
+    """)
+    assert "RWA501" in _codes(res)
+
+
+def test_rules_balanced_tx_with_rollback_clean():
+    res = _rules("""
+        def ok(pool, slot):
+            pool.begin()
+            try:
+                pool.admit(slot, 1)
+                pool.commit()
+            except RuntimeError:
+                pool.rollback()
+                raise
+    """)
+    assert res.ok and res.checked > 0
+
+
+def test_rules_eviction_inside_tx_fires():
+    res = _rules("""
+        def bad(pool, slot):
+            pool.begin()
+            pool._make_room(3)
+            pool.admit(slot, 1)
+            pool.commit()
+    """)
+    assert "RWA502" in _codes(res)
+
+
+def test_rules_mutation_outside_tx_fires():
+    res = _rules("""
+        def bad(pool, slot):
+            pool.admit(slot, 1)
+    """)
+    assert "RWA503" in _codes(res)
+
+
+def test_rules_weight_concat_fires_and_is_optional():
+    src = """
+        import jax.numpy as jnp
+
+        def fuse(parts):
+            return jnp.concatenate(parts, axis=-1)
+    """
+    assert "RWA504" in _codes(_rules(src))
+    assert _rules(src, concat_rule=False).ok
+
+
+def test_shipped_serve_modules_rules_clean():
+    for mod in RULE_MODULES:
+        res = rules.audit_file(os.path.join(SERVE_DIR, mod),
+                               concat_rule=(mod != "engine.py"))
+        assert res.ok, f"{mod}: {[str(d) for d in res.errors()]}"
+
+
+# ---------------------------------------------------- compile-bound pass
+
+def test_enumeration_matches_documented_bound():
+    # max_len=64, min_bucket=16 -> buckets (16, 32, 64); chunks are the
+    # buckets <= prefill_chunk -> (16,); one full-width decode program
+    inv = compile_bound.enumerate_programs(max_len=64, page_size=16,
+                                           prefill_chunk=16)
+    assert inv.prefill_lens == (16, 32, 64)
+    assert inv.chunk_shapes == (16,)
+    assert inv.step_widths == (4,)
+    assert inv.bound == 3 + 1 + 1
+    res = compile_bound.audit_bound(inv, n_buckets=3, n_chunk_shapes=1,
+                                    max_pages=4)
+    assert res.ok
+
+    seeded = compile_bound.audit_bound(inv, n_buckets=2,
+                                       n_chunk_shapes=1, max_pages=4)
+    assert _codes(seeded) == ["RWA301"]
+
+
+def test_enumeration_table_width_ladder():
+    inv = compile_bound.enumerate_programs(max_len=64, page_size=16,
+                                           table_width_bucketing=True)
+    assert inv.step_widths == (1, 2, 4)
+    res = compile_bound.audit_bound(inv, n_buckets=3, n_chunk_shapes=0,
+                                    max_pages=4,
+                                    table_width_bucketing=True)
+    assert res.ok
+
+    forged = dataclasses.replace(inv, step_widths=(1, 2, 4, 8))
+    res = compile_bound.audit_bound(forged, n_buckets=3,
+                                    n_chunk_shapes=0, max_pages=4,
+                                    table_width_bucketing=True)
+    assert _codes(res) == ["RWA301"]
+
+
+def test_weak_type_operand_fires():
+    weak = jax.make_jaxpr(lambda x, t: x * t)(jnp.ones(4), 2.0)
+    strong = jax.make_jaxpr(lambda x, t: x * t)(jnp.ones(4),
+                                                jnp.float32(2.0))
+    assert _codes(compile_bound.weak_type_audit([("f", weak)])) \
+        == ["RWA302"]
+    assert compile_bound.weak_type_audit([("f", strong)]).ok
+
+
+class _StubEngine:
+    """compile_counts() and the host proxies disagree with each other
+    AND with the static prediction — both RWA303 arms must fire."""
+    _prefill_lens = {16}
+    _chunk_shapes = ()
+    _step_widths = {4}
+
+    def compile_counts(self):
+        return {"prefill": 2, "chunk": 0, "step": 1}
+
+
+def test_runtime_count_drift_fires():
+    expected = compile_bound.predict_compile_counts([3, 5], max_len=64)
+    assert expected == {"prefill": 1, "chunk": 0, "step": 1}
+    res = compile_bound.check_engine_counts(_StubEngine(), expected,
+                                            name="stub")
+    msgs = [d.message for d in res.diagnostics]
+    assert _codes(res) == ["RWA303"]
+    assert any("static enumeration" in m for m in msgs)
+    assert any("host proxy" in m for m in msgs)
+
+
+def test_prediction_models_chunk_padding():
+    # 50 with chunk 16 -> 16,16,16 then the 2-token tail pads to the
+    # 16 bucket: one distinct chunk shape, no one-shot prefill program
+    got = compile_bound.predict_compile_counts(
+        [50], max_len=64, prefill_chunk=16)
+    assert got == {"prefill": 0, "chunk": 1, "step": 1}
+
+
+# ------------------------------------------------------------- vmem pass
+
+def test_vmem_overbudget_kernel_fires():
+    from jax.experimental import pallas as pl
+
+    def copy_kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    # whole-array 4096x4096 fp32 block: 64 MB in + 64 MB out, modeled
+    # residency 192 MB vs the 14 MB post-headroom budget
+    big = jax.ShapeDtypeStruct((4096, 4096), jnp.float32)
+    jaxpr = jax.make_jaxpr(lambda a: pl.pallas_call(
+        copy_kernel, out_shape=big, interpret=True)(a))(big)
+    res = vmem.audit_vmem(jaxpr, "fixture")
+    assert _codes(res) == ["RWA401"] and res.checked == 1
+    fp, = vmem.kernel_footprints(jaxpr)
+    assert fp.resident_bytes == 3 * 4096 * 4096 * 4
+
+
+def test_vmem_plan_crosscheck():
+    m, k, n = 256, 16384, 512
+    plan = plan_matmul(m, k, n, dtype_bytes=4)
+    x = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    w = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    jaxpr = jax.make_jaxpr(
+        lambda a, b: ops.matmul(a, b, impl="interpret"))(x, w)
+    assert vmem.crosscheck_plan(jaxpr, plan, "matmul").ok
+
+    forged = dataclasses.replace(plan, vmem_bytes=1)
+    res = vmem.crosscheck_plan(jaxpr, forged, "matmul")
+    assert "RWA402" in _codes(res)
+
+
+# ------------------------------------------------- engine regression
+
+def test_submit_normalises_prompt_to_host():
+    """PR-9 regression: the auditor's RWA103 caught `_effective_prompt`
+    re-fetching a device-resident prompt on every admission attempt;
+    submit() now pays the transfer exactly once."""
+    from repro.analysis.audit import build_engine
+    from repro.serve.engine import Request
+
+    eng, _ = build_engine("deepseek-7b", 1)
+    eng.submit(Request(rid=0, prompt=jnp.arange(5, dtype=jnp.int32),
+                       max_new=1))
+    queued = eng.queue[-1].req.prompt
+    assert isinstance(queued, np.ndarray)
+    assert not isinstance(queued, jax.Array)
+    assert queued.dtype == np.int32
+    np.testing.assert_array_equal(queued, np.arange(5))

@@ -283,6 +283,12 @@ def test_chunked_matches_one_shot_mixed_lengths(chunk):
         assert c.ttft_s > 0 and len(c.itl_s) == len(c.tokens) - 1
     # prompts <= chunk took the one-shot path; longer ones chunked
     assert eng._chunk_shapes and eng._prefill_lens
+    # the auditor's static enumeration predicts the jit caches exactly
+    from repro.analysis import compile_bound
+    expected = compile_bound.predict_compile_counts(
+        plens, max_len=96, prefill_chunk=chunk)
+    assert eng.compile_counts() == expected
+    assert compile_bound.check_engine_counts(eng, expected).ok
 
 
 @pytest.mark.slow

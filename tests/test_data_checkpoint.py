@@ -1,5 +1,6 @@
 """Data pipeline determinism/seekability + checkpointer guarantees."""
 import os
+import zipfile
 
 import jax
 import jax.numpy as jnp
@@ -92,7 +93,9 @@ def test_corruption_detected(tmp_path):
     with open(shard, "r+b") as f:
         f.seek(10)
         f.write(b"\x00\x00\x00\x00")
-    with pytest.raises(Exception):
+    # checksum mismatch (IOError) is the designed failure; a torn npz
+    # can also fail inside numpy's zip reader before the checksum runs
+    with pytest.raises((IOError, ValueError, zipfile.BadZipFile)):
         ckpt.restore(str(tmp_path), 1, tree)
 
 

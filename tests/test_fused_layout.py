@@ -206,7 +206,7 @@ def test_decode_jaxpr_has_no_weight_concat():
     weight-sized concatenate — the per-call wq|wk|wv fuse is gone from
     the serving hot path (rope's activation-sized concats stay well
     under the threshold)."""
-    from benchmarks.decode_bench import min_weight_bytes, weight_concat_eqns
+    from repro.analysis import min_weight_bytes, weight_concat_eqns
     cfg = REDUCED["deepseek-7b"]()
     params, _ = lm.init_lm(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
     tok = jnp.zeros((2, 1), jnp.int32)

@@ -10,6 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import analysis
 from repro.core import runtime
 from repro.core.block_traffic import swin_block_traffic, swin_t_stage_cases
 from repro.core.quant import quantize_per_channel, quantize_per_row
@@ -164,7 +165,9 @@ def test_norm_prologue_fallback_large_k(rng):
     jaxpr = jax.make_jaxpr(
         lambda a, b, c: ops.matmul(a, b, norm=ops.NormSpec("rms", c),
                                    impl="interpret"))(x, w, g)
-    assert str(jaxpr).count("pallas_call") == 2, str(jaxpr)
+    # structured launch count via the auditor, not a string match
+    assert analysis.count_primitive(jaxpr, "pallas_call") == 2, \
+        str(jaxpr)
 
 
 # ------------------------- residual epilogue ---------------------------

@@ -15,6 +15,7 @@ import numpy as np
 import pytest
 from conftest import manual_greedy
 
+from repro.analysis import compile_bound
 from repro.configs import REDUCED
 from repro.core.block_traffic import (dense_kv_step_bytes, kv_layer_counts,
                                       paged_kv_step_bytes,
@@ -329,6 +330,12 @@ def test_engine_compile_stability():
     assert counts["prefill"] + counts["step"] <= len(eng.buckets) + 1
     # host-side proxy (distinct padded lengths) agrees with the jit cache
     assert counts["prefill"] == len(eng._prefill_lens)
+    # the auditor's static enumeration predicts the jit caches EXACTLY:
+    # any drift means a shape source the closed-form bound doesn't model
+    expected = compile_bound.predict_compile_counts(
+        [3, 5, 9, 17, 21, 33, 40, 13], max_len=64)
+    assert counts == expected
+    assert compile_bound.check_engine_counts(eng, expected).ok
 
 
 @pytest.mark.slow
@@ -365,6 +372,17 @@ def test_compile_stability_mixed_chunked_traffic():
     # every chunk shape sits on the bucket ladder at or below the chunk
     assert all(s in eng.buckets and s <= eng.prefill_chunk
                for s in eng._chunk_shapes)
+    # static enumeration == runtime jit caches, exactly
+    expected = compile_bound.predict_compile_counts(
+        [3, 16, 17, 21, 32, 40, 64, 5, 50, 33], max_len=64,
+        prefill_chunk=16)
+    assert counts == expected
+    assert compile_bound.check_engine_counts(eng, expected).ok
+    inv = compile_bound.enumerate_programs(
+        max_len=64, page_size=eng.page_size, prefill_chunk=16)
+    assert set(eng._prefill_lens) <= set(inv.prefill_lens)
+    assert set(eng._chunk_shapes) <= set(inv.chunk_shapes)
+    assert set(eng._step_widths) <= set(inv.step_widths)
 
 
 @pytest.mark.slow
