@@ -29,6 +29,8 @@ REQUIRED = {
     "BENCH_PR8.json": ("hit_rate", "flops", "live_pages", "ttft",
                        "parity", "compiles", "config"),
     "BENCH_PR9.json": ("passes", "compiles", "config"),
+    "BENCH_PR10.json": ("acceptance", "traffic", "parity", "compiles",
+                        "config"),
 }
 
 

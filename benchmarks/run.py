@@ -6,7 +6,8 @@ artifact (BENCH_PR3.json), the PR 4 decode weight-traffic artifact
 (BENCH_PR4.json), the PR 5 chunked-prefill TTFT artifact
 (BENCH_PR5.json), the PR 7 preemption-pressure artifact
 (BENCH_PR7.json), the PR 8 prefix-cache artifact (BENCH_PR8.json),
-the PR 9 static-auditor artifact (BENCH_PR9.json)
+the PR 9 static-auditor artifact (BENCH_PR9.json), the PR 10
+self-speculative-decoding artifact (BENCH_PR10.json)
 and the PR 6 tensor-parallel artifact
 (BENCH_PR6.json — run as a subprocess: the emulated mesh needs
 XLA_FLAGS set before jax initialises, which has already happened in
@@ -29,6 +30,7 @@ def main() -> None:
     from benchmarks.serve_bench import (chunked_prefill_bench,
                                         preemption_bench,
                                         prefix_cache_bench, serve_bench)
+    from benchmarks.spec_bench import spec_bench
 
     rows = []
 
@@ -48,6 +50,7 @@ def main() -> None:
     preemption_bench(emit, json_path="BENCH_PR7.json")
     prefix_cache_bench(emit, json_path="BENCH_PR8.json")
     analysis_bench(emit, json_path="BENCH_PR9.json")
+    spec_bench(emit, json_path="BENCH_PR10.json")
     sys.stdout.flush()
     tp = subprocess.run(
         [sys.executable,

@@ -58,7 +58,8 @@ def _parse_args(argv=None):
 ENGINE_SYNC_ALLOW = {"run": 1, "_fill_slots": 1, "_advance_chunks": 1}
 
 SERVE_DIR_MODULES = ("engine.py", "paging.py", "sampling.py",
-                     "placement.py", "prefix_cache.py", "faults.py")
+                     "placement.py", "prefix_cache.py", "faults.py",
+                     "spec.py")
 RULE_MODULES = ("engine.py", "paging.py", "prefix_cache.py")
 
 
@@ -78,7 +79,8 @@ def build_engine(arch: str, mesh: int):
     params, _ = lm.init_lm(jax.random.PRNGKey(0), cfg,
                            dtype=jnp.float32)
     return Engine(params, cfg, n_slots=2, max_len=64, eos_id=-1,
-                  paging=PagingConfig(page_size=16, prefill_chunk=16),
+                  paging=PagingConfig(page_size=16, prefill_chunk=16,
+                                      speculate_k=2),
                   placement=placement), cfg
 
 
@@ -139,15 +141,21 @@ def run_passes(arch: str, mesh: int, which=None):
         t0 = time.perf_counter()
         res = compile_bound.PassResult(name="compile-bound")
         for twb in (False, True):
+            # speculation ships full-width tables (the engine forbids
+            # speculate_k + twb), so the twb leg audits the spec-free
+            # ladder and the plain leg carries the engine's k-ladder
+            sk = 0 if twb else eng.spec_k
             inv = compile_bound.enumerate_programs(
                 max_len=eng.max_len, page_size=eng.page_size,
                 prefill_chunk=eng.prefill_chunk,
-                buckets=eng.buckets, table_width_bucketing=twb)
+                buckets=eng.buckets, table_width_bucketing=twb,
+                speculate_k=sk)
             r = compile_bound.audit_bound(
                 inv, n_buckets=len(eng.buckets),
                 n_chunk_shapes=len([b for b in eng.buckets
                                     if b <= eng.prefill_chunk]),
                 max_pages=eng.max_pages, table_width_bucketing=twb,
+                n_spec_shapes=len(eng.spec_ladder) if sk else 0,
                 name=f"{cfg.name}[twb={twb}]")
             res.diagnostics += r.diagnostics
             res.checked += r.checked

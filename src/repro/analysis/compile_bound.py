@@ -31,7 +31,8 @@ import dataclasses
 from typing import Dict, Iterable, Optional, Sequence, Tuple
 
 from repro.analysis.report import Diagnostic, PassResult
-from repro.serve.paging import bucket_for, chunk_schedule, default_buckets
+from repro.serve.paging import (bucket_for, chunk_schedule,
+                                default_buckets, spec_ladder)
 
 
 def _ceil_div(a: int, b: int) -> int:
@@ -51,23 +52,28 @@ class ProgramInventory:
     prefill_lens: Tuple[int, ...]    # padded one-shot prefill lengths
     chunk_shapes: Tuple[int, ...]    # chunk panel widths
     step_widths: Tuple[int, ...]     # decode block-table widths
+    spec_shapes: Tuple[int, ...] = ()  # verify panel widths (1 + k-ladder)
 
     @property
     def bound(self) -> int:
         return (len(self.prefill_lens) + len(self.chunk_shapes)
-                + len(self.step_widths))
+                + len(self.step_widths) + len(self.spec_shapes))
 
 
 def enumerate_programs(*, max_len: int, page_size: int,
                        prefill_chunk: int = 0, min_bucket: int = 16,
                        buckets: Optional[Sequence[int]] = None,
                        table_width_bucketing: bool = False,
+                       speculate_k: int = 0,
                        bucketing: bool = True) -> ProgramInventory:
     """Statically enumerate every shape signature the engine can hand
-    its three jitted entry points. ``bucketing=False`` models the
+    its jitted entry points. ``bucketing=False`` models the
     recurrent/MoE exact-length prefill archs, whose prefill set is the
     (unbounded) set of submitted lengths — represented as empty here;
-    only the decode side stays provable for them."""
+    only the decode side stays provable for them. ``speculate_k``
+    enumerates the verify panel widths ``1 + paging.spec_ladder(k)``
+    (speculation requires a bucketing-capable arch and full-width
+    tables, so the set never multiplies against the width ladder)."""
     if bucketing:
         ladder = tuple(sorted(buckets)) if buckets is not None \
             else tuple(default_buckets(max_len, min_bucket))
@@ -81,20 +87,30 @@ def enumerate_programs(*, max_len: int, page_size: int,
                                for hi in range(max_pages + 1)}))
     else:
         widths = (max_pages,)
+    specs = tuple(1 + w for w in spec_ladder(speculate_k)) \
+        if bucketing else ()
     return ProgramInventory(prefill_lens=ladder, chunk_shapes=chunks,
-                            step_widths=widths)
+                            step_widths=widths, spec_shapes=specs)
 
 
 def audit_bound(inv: ProgramInventory, *, n_buckets: int,
                 n_chunk_shapes: int, max_pages: int,
                 table_width_bucketing: bool = False,
+                n_spec_shapes: int = 0,
                 name: str = "engine") -> PassResult:
     """Check the enumeration against the documented closed form:
-    ``n_buckets + n_chunk_shapes + 1`` decode programs, the +1 growing
-    to the ``log2(max_pages)+1``-entry pow2 width ladder under
-    table-width bucketing (DESIGN.md §7)."""
+    ``n_buckets + n_chunk_shapes + 1 + n_spec_shapes`` programs, the +1
+    decode program growing to the ``log2(max_pages)+1``-entry pow2
+    width ladder under table-width bucketing, and ``n_spec_shapes``
+    being the documented verify k-ladder length (DESIGN.md §7/§10)."""
     result = PassResult(name="compile-bound")
-    result.checked = 3
+    result.checked = 4
+    if len(inv.spec_shapes) != n_spec_shapes:
+        result.diagnostics.append(Diagnostic(
+            code="RWA301", path=name,
+            message=f"{len(inv.spec_shapes)} reachable verify panel "
+                    f"shapes, documented k-ladder length is "
+                    f"{n_spec_shapes}"))
     if len(inv.prefill_lens) != n_buckets:
         result.diagnostics.append(Diagnostic(
             code="RWA301", path=name,
@@ -162,8 +178,14 @@ def check_engine_counts(engine, expected: Dict[str, int],
     actual = engine.compile_counts()
     proxies = {"prefill": len(engine._prefill_lens),
                "chunk": len(engine._chunk_shapes),
-               "step": len(engine._step_widths)}
-    for kind in ("prefill", "chunk", "step"):
+               "step": len(engine._step_widths),
+               "spec": len(getattr(engine, "_spec_shapes", ()))}
+    kinds = ("prefill", "chunk", "step")
+    # the verify entry point is audited only when the prediction models
+    # it (speculation off => both sides hold it at zero anyway)
+    if "spec" in expected and "spec" in actual:
+        kinds += ("spec",)
+    for kind in kinds:
         result.checked += 1
         if actual[kind] != expected[kind]:
             result.diagnostics.append(Diagnostic(

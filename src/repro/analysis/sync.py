@@ -63,7 +63,7 @@ class SyncPolicy:
     device_get_allow: Dict[str, int] = dataclasses.field(
         default_factory=dict)
     device_methods: Tuple[str, ...] = ("_step", "_admit", "_chunk",
-                                       "put_rep")
+                                       "_spec", "put_rep")
     # names bound to device-returning callables (`put = placement.put_rep`)
     device_aliases: Tuple[str, ...] = ("put",)
 

@@ -316,6 +316,58 @@ def serve_kv_traffic(trace, cfg, *, n_slots: int, max_len: int,
 
 
 # ----------------------------------------------------------------------
+# Speculative decode: HBM bytes per ACCEPTED token
+# ----------------------------------------------------------------------
+
+
+def spec_step_traffic(cfg, *, lengths, accepted_total: int,
+                      page_size: int, n_slots: int = None,
+                      dtype_bytes: int = 2) -> dict:
+    """Bytes-per-accepted-token model for ONE speculative verify step
+    (PR 10) against the plain decode steps it replaces.
+
+    Decode at serving batch sizes is weight-streaming-bound (PR 4): one
+    fused-panel fetch per block per step, whatever M is. The verify
+    step scores a ``1 + k`` row panel per slot through the same
+    row-wise primitive — M grows, the weight fetch does not (the source
+    paper's resource-reuse argument) — and its multi-query prefix
+    gather reads each live page once per STEP instead of once per
+    emitted token. Emitting the same ``n_live + accepted_total`` tokens
+    by plain decode streams the weights and re-gathers the prefix that
+    many times over.
+
+    ``lengths``: live-slot token lengths at the step (the Engine
+    ``kv_trace`` row). Returns ``{"step_bytes", "weight_bytes",
+    "kv_bytes", "emitted", "bytes_per_accepted",
+    "decode_bytes_per_token", "amortization"}``; with no accepted
+    drafts the model degenerates to decode's own bytes/token
+    (amortization 1.0).
+    """
+    n_live = len(lengths)
+    if n_slots is None:
+        n_slots = max(n_live, 1)
+    w = decode_weight_traffic_cfg(cfg, n_slots=n_slots,
+                                  dtype_bytes=dtype_bytes)
+    n_blocks = sum(st.repeat * len(st.body) for st in cfg.stages())
+    n_global, n_local, window = kv_layer_counts(cfg)
+    kv = paged_kv_step_bytes(lengths, page_size=page_size,
+                             n_global=n_global, n_local=n_local,
+                             window=window, n_kv_heads=cfg.n_kv_heads,
+                             head_dim=cfg.head_dim,
+                             dtype_bytes=dtype_bytes)
+    weight = w["weight_bytes"] * n_blocks
+    step = weight + kv
+    emitted = n_live + int(accepted_total)
+    per_tok = step / emitted if emitted else float(step)
+    decode_per_tok = step / n_live if n_live else float(step)
+    return {"step_bytes": step, "weight_bytes": weight, "kv_bytes": kv,
+            "emitted": emitted, "bytes_per_accepted": per_tok,
+            "decode_bytes_per_token": decode_per_tok,
+            "amortization": (decode_per_tok / per_tok if per_tok
+                             else 1.0)}
+
+
+# ----------------------------------------------------------------------
 # Prefix-cache traffic: prefill FLOPs and KV bytes a radix hit skips
 # ----------------------------------------------------------------------
 

@@ -100,6 +100,16 @@ class PagingConfig:
     # across mid-prefill slots (0 => unbounded). The head of the chunk
     # queue always advances, so prefill can't fully starve.
     prefill_token_budget: int = 0
+    # Self-speculative decode: max draft tokens per slot per step
+    # (0 => off). Drafts come from a host-side prompt-lookup n-gram
+    # drafter (serve/spec.py); a batched verify step scores the panel
+    # through the chunk kernels and writes only accepted rows. Panel
+    # widths pad up the documented ``paging.spec_ladder`` so the
+    # compile bound grows by len(ladder) programs exactly. Requires a
+    # bucketing-capable arch, and is mutually exclusive with
+    # table_width_bucketing (the width ladder would multiply the
+    # k-ladder; speculative steps ship full-width tables instead).
+    speculate_k: int = 0
 
 
 @dataclasses.dataclass(frozen=True)

@@ -60,6 +60,22 @@ def main(argv=None):
                          "prompt_len + i %% 8 tokens); raise above "
                          "--prefill-chunk to drive chunked admissions")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="sample from the k highest-logit tokens "
+                         "(0 = full vocab). Static per engine — one "
+                         "compiled program; greedy rows (t=0) stay "
+                         "bit-identical regardless")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass cutoff (1.0 = off); "
+                         "static per engine, like --top-k")
+    ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                    help="self-speculative decoding: a host-side "
+                         "prompt-lookup drafter proposes up to K "
+                         "tokens/step, one batched verify forward "
+                         "scores them, rejected tails roll back "
+                         "page-exactly. Greedy streams stay "
+                         "bit-identical to K=0; repetitive prompts "
+                         "accept >1 token/step")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--fault-plan", default="",
                     help="deterministic chaos schedule, e.g. "
@@ -95,12 +111,14 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     params, _ = lm.init_lm(key, cfg, dtype=jnp.float32)
     eng = Engine(params, cfg, n_slots=args.slots, max_len=args.max_len,
-                 eos_id=-1, temperature=args.temperature, seed=args.seed,
+                 eos_id=-1, temperature=args.temperature,
+                 top_k=args.top_k, top_p=args.top_p, seed=args.seed,
                  paging=PagingConfig(
                      page_size=args.page_size, n_pages=args.n_pages,
                      prefill_chunk=args.prefill_chunk,
                      prefix_cache=args.prefix_cache,
-                     prefill_token_budget=args.prefill_token_budget),
+                     prefill_token_budget=args.prefill_token_budget,
+                     speculate_k=args.speculate),
                  placement=placement, faults=plan,
                  preempt_patience=args.preempt_patience)
     for i in range(args.requests):
@@ -139,6 +157,7 @@ def main(argv=None):
         kv = "KV traffic: n/a (no attention layers)"
     print(f"{kv}; compiles: prefill={compiles['prefill']} "
           f"chunk={compiles['chunk']} step={compiles['step']} "
+          f"spec={compiles.get('spec', 0)} "
           f"buckets={eng.buckets} prefill_chunk={eng.prefill_chunk}")
 
 

@@ -563,9 +563,12 @@ def write_chunk_pages(pool: PagedKVCache, k_new, v_new, offset, chunk_len,
     """Append a prefill chunk's K/V (B, Sc, Hkv, hd) at logical
     positions ``offset .. offset + chunk_len - 1`` through the block
     table ``pages`` (B, n_logical) — the multi-token generalization of
-    :func:`write_pages`. ``offset`` is a scalar or per-row (B,) int32.
-    Right padding (rows >= chunk_len) routes out of range and is
-    dropped. Windowed layers write through the ring (``pos % window``)
+    :func:`write_pages`. ``offset`` and ``chunk_len`` are scalar or
+    per-row (B,) int32 — per-row ``chunk_len`` is how the speculative
+    verify step writes only each slot's *accepted* draft rows (a row
+    with ``chunk_len == 0`` writes nothing). Right padding (rows >=
+    chunk_len) routes out of range and is dropped. Windowed layers
+    write through the ring (``pos % window``)
     and keep only the chunk's last ``window`` positions — earlier rows
     would be clobbered by a later in-chunk position at the same ring
     slot, and no future query needs them — which also keeps the
@@ -582,11 +585,12 @@ def write_chunk_pages(pool: PagedKVCache, k_new, v_new, offset, chunk_len,
     ps = pool.k.shape[1]
     i = jnp.arange(sc)
     offset = jnp.broadcast_to(jnp.asarray(offset), (b,))
+    clen = jnp.broadcast_to(jnp.asarray(chunk_len), (b,))
     pos = offset[:, None] + i[None]                            # (B, Sc)
-    valid = jnp.broadcast_to(i[None] < chunk_len, (b, sc))
+    valid = i[None] < clen[:, None]
     r = pos
     if window:
-        valid &= pos >= (offset + chunk_len)[:, None] - window
+        valid &= pos >= (offset + clen)[:, None] - window
         r = pos % window
     lp = jnp.clip(r // ps, 0, pages.shape[1] - 1)              # (B, Sc)
     pid = jnp.where(valid, jnp.take_along_axis(pages, lp, axis=1),
@@ -637,6 +641,21 @@ def paged_chunk_apply(params, x, pool: PagedKVCache, *, cfg: ModelConfig,
     the prefix gather, so ring writes cannot clobber prefix keys the
     chunk's queries still need.
     """
+    out, k, v = _chunk_attn_core(params, x, pool, cfg=cfg, offset=offset,
+                                 chunk_len=chunk_len, pages=pages,
+                                 window=window, norm=norm,
+                                 residual=residual)
+    pool = write_chunk_pages(pool, k, v, offset, chunk_len, pages,
+                             window)
+    return out, pool
+
+
+def _chunk_attn_core(params, x, pool: PagedKVCache, *, cfg: ModelConfig,
+                     offset, chunk_len, pages, window: int,
+                     norm: Optional[ops.NormSpec], residual):
+    """Shared math of :func:`paged_chunk_apply` /
+    :func:`paged_verify_apply`: exact softmax over prefix ∪ chunk with
+    no pool mutation. Returns (projected out, chunk k, chunk v)."""
     b, sc, d = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     positions = offset[:, None] + jnp.arange(sc, dtype=jnp.int32)[None]
@@ -660,10 +679,30 @@ def paged_chunk_apply(params, x, pool: PagedKVCache, *, cfg: ModelConfig,
                                   chunk=1024, q_offset=offset,
                                   window=window)
         out = _merge_partials(out_c, lse_c, out_p, lse_p)
-    pool = write_chunk_pages(pool, k, v, offset, chunk_len, pages,
-                             window)
     out = out.transpose(0, 2, 1, 3).reshape(b, sc, hq * hd)
-    return _out_proj(out, params["wo"], residual), pool
+    return _out_proj(out, params["wo"], residual), k, v
+
+
+def paged_verify_apply(params, x, pool: PagedKVCache, *,
+                       cfg: ModelConfig, offset, chunk_len, pages,
+                       window: int = 0,
+                       norm: Optional[ops.NormSpec] = None,
+                       residual=None):
+    """Speculative-verify forward for one attention layer: bit-identical
+    attention math to :func:`paged_chunk_apply` over the draft panel
+    (the panel is causal over itself plus the slot's written prefix),
+    but the panel's K/V are NOT written to the pool — they are returned
+    so the engine can score the logits first and then write only the
+    accepted prefix rows (:func:`write_chunk_pages` with per-row
+    accepted lengths). Deferring the write keeps rejected drafts out of
+    the pool entirely, which matters for sliding-window layers: a ring
+    write from a rejected row would clobber the very prefix keys the
+    re-decode of that position still needs. Returns (out, (k, v))."""
+    out, k, v = _chunk_attn_core(params, x, pool, cfg=cfg, offset=offset,
+                                 chunk_len=chunk_len, pages=pages,
+                                 window=window, norm=norm,
+                                 residual=residual)
+    return out, (k, v)
 
 
 def paged_decode_apply(params, x, pool: PagedKVCache, *, cfg: ModelConfig,

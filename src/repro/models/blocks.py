@@ -78,8 +78,8 @@ def apply_block(blk: BlockDef, params, x, *, cfg: ModelConfig, mode: str,
                 positions=None, lengths=None, cache=None, enc_out=None,
                 pages=None, chunk_len=None,
                 window_override: Optional[int] = None) -> tuple:
-    """mode: 'train' | 'prefill' | 'decode' | 'chunk'. Returns
-    (x, BlockIO).
+    """mode: 'train' | 'prefill' | 'decode' | 'chunk' | 'verify'.
+    Returns (x, BlockIO).
 
     pages: (B, max_pages) int32 block table for paged decode — required
     when the decode cache's KV leaf is a :class:`PagedKVCache` pool.
@@ -90,8 +90,13 @@ def apply_block(blk: BlockDef, params, x, *, cfg: ModelConfig, mode: str,
     prefix pages + the in-flight chunk and append their KV. Only
     causal-attention archs may chunk (``paging.supports_bucketing`` —
     recurrent mixers would fold the split into their state).
+    'verify' is the speculative-decode scoring mode: same panel
+    semantics as 'chunk' (now batched, per-row offsets/lengths) but the
+    pool is read-only — each layer returns its panel (k, v) as
+    ``prefill_state`` and the engine writes only accepted rows after
+    acceptance (:func:`lm.insert_verify`).
     """
-    if mode == "chunk":
+    if mode in ("chunk", "verify"):
         assert blk.mixer == "attn" and not blk.cross_attn, (
             "chunked prefill requires every position's state to be "
             f"causal-attention KV; {blk.mixer}/cross_attn blocks must "
@@ -128,6 +133,12 @@ def apply_block(blk: BlockDef, params, x, *, cfg: ModelConfig, mode: str,
                 chunk_len=chunk_len, pages=pages, window=window,
                 norm=nspec, residual=res)
             new_cache["kv"] = kv_new
+        elif mode == "verify":
+            out, (k, v) = attention.paged_verify_apply(
+                params["attn"], h, cache["kv"], cfg=cfg, offset=lengths,
+                chunk_len=chunk_len, pages=pages, window=window,
+                norm=nspec, residual=res)
+            prefill_state["kv"] = (k, v)
         else:
             out, (k, v) = attention.apply(params["attn"], h, cfg=cfg,
                                           positions=positions,

@@ -232,7 +232,8 @@ def _run_stage(stage: Stage, sp, x, *, cfg: ModelConfig, mode: str,
             aux = aux + io.aux
             if mode in ("decode", "chunk") and io.new_cache is not None:
                 out_states[key] = io.new_cache
-            elif mode == "prefill" and io.prefill_state is not None:
+            elif (mode in ("prefill", "verify")
+                    and io.prefill_state is not None):
                 out_states[key] = io.prefill_state
         return (x, aux), out_states
 
@@ -670,6 +671,74 @@ def prefill_chunk(params, cache, tokens, cfg: ModelConfig, *, offset,
         x, jnp.broadcast_to(idx, (b, 1, x.shape[-1])), axis=1)
     logits = unembed(params, xl, cfg)
     return logits[:, 0], new_cache
+
+
+def verify_states(params, cache, tokens, cfg: ModelConfig, *, offset,
+                  chunk_len, pages):
+    """Speculative-verify forward (the batched, read-only sibling of
+    :func:`prefill_chunk`): score a (B, Sc) panel — each slot's last
+    committed token plus its draft tokens, right-padded to the static
+    ladder width — against the paged cache, WITHOUT writing the panel's
+    KV. ``offset``/``chunk_len``: per-row (B,) int32 (tokens already in
+    the cache / real panel rows, ``1 + k_b``; 0 rows are fully masked).
+    Returns (full panel logits (B, Sc, V), per-layer panel KV states) —
+    logits, not a gathered position, because acceptance needs every
+    panel position's distribution; the caller then writes only accepted
+    rows via :func:`insert_verify`. The split mirrors the
+    ``prefill_states`` / ``insert_prefill`` pair: forward first, commit
+    separately. Only causal-attention archs verify (the engine gates on
+    ``paging.supports_bucketing``)."""
+    b, s = tokens.shape
+    offset = jnp.broadcast_to(jnp.asarray(offset, jnp.int32), (b,))
+    x = embed(params, tokens, cfg, None)
+    x = logical_constraint(x, "batch", "seq", "act_embed")
+    if cfg.rope == "none" and not cfg.encdec:
+        pe = rope.sinusoidal_embedding(1 << 16, cfg.d_model)
+        pos = offset[:, None] + jnp.arange(s, dtype=jnp.int32)[None]
+        x = x + pe[pos].astype(x.dtype)
+    x, _, states = _run_stages(params["stages"], cfg.stages(), x,
+                               cfg=cfg, mode="verify", positions=None,
+                               lengths=offset, cache=cache, pages=pages,
+                               chunk_len=chunk_len, remat=False)
+    return unembed(params, x, cfg), states
+
+
+def insert_verify(cfg: ModelConfig, cache, states, *, pages, offset,
+                  n_keep):
+    """Write the accepted prefix of a verify panel into the paged cache:
+    every attention layer scatters its panel rows ``< n_keep[b]`` (per
+    row: the re-scored committed token plus the accepted drafts;
+    ``n_keep == 0`` writes nothing — inactive or fully-rolled-back
+    slots). The layer walk mirrors :func:`insert_prefill`; verify
+    states only ever hold attention KV (verify requires a
+    bucketing-capable, attention-only arch). The per-layer scatter is
+    :func:`attention.write_chunk_pages` vmapped over the scan-stacked
+    layer axis, so accepted writes reuse the chunked-prefill scatter
+    (including windowed ring routing) exactly."""
+    out = []
+    for si, stage in enumerate(cfg.stages()):
+        sc = {}
+        for i, blk in enumerate(stage.body):
+            key = str(i)
+            cur = (cache[si] or {}).get(key)
+            if cur is None:
+                continue
+            st = (states[si] or {}).get(key) or {}
+            c = dict(cur)
+            if "kv" in st:
+                k, v = st["kv"]
+
+                def wr(pk, pv, kk, vv, window=blk.window):
+                    pool = attention.write_chunk_pages(
+                        attention.PagedKVCache(k=pk, v=pv), kk, vv,
+                        offset, n_keep, pages, window)
+                    return pool.k, pool.v
+
+                nk, nv = jax.vmap(wr)(cur["kv"].k, cur["kv"].v, k, v)
+                c["kv"] = attention.PagedKVCache(k=nk, v=nv)
+            sc[key] = c
+        out.append(sc)
+    return out
 
 
 def cow_copy(cache, src, dst):

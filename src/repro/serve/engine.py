@@ -87,12 +87,12 @@ import numpy as np
 from repro.core import quant
 from repro.core.types import ModelConfig, PagingConfig
 from repro.models import lm
-from repro.serve import sampling
+from repro.serve import sampling, spec
 from repro.serve.faults import AllocFault, FaultPlan, StepFault
 from repro.serve.placement import CACHE, PARAMS, REP, SingleDevice
 from repro.serve.paging import (PagePool, bucket_for, chunk_schedule,
                                 default_buckets, page_aligned_size,
-                                supports_bucketing)
+                                spec_ladder, supports_bucketing)
 from repro.serve.prefix_cache import PrefixCache
 
 TERMINAL_STATUSES = ("ok", "eos", "length", "deadline", "cancelled",
@@ -178,7 +178,8 @@ class _ChunkState:
 class Engine:
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
                  max_len: int = 512, eos_id: int = 1,
-                 temperature: float = 0.0, seed: int = 0,
+                 temperature: float = 0.0, top_k: int = 0,
+                 top_p: float = 1.0, seed: int = 0,
                  paging: PagingConfig = PagingConfig(),
                  buckets: Optional[List[int]] = None,
                  cache_dtype=None, placement=None,
@@ -195,6 +196,11 @@ class Engine:
         rcfg = self.placement.compute_cfg(cfg)
         self.n_slots, self.max_len, self.eos_id = n_slots, max_len, eos_id
         self.temperature = temperature
+        # engine-level static top-k / nucleus filter: traced nowhere, so
+        # the decode/verify programs stay one compile each; greedy rows
+        # (per-row temperature < GREEDY_EPS) sample from the raw logits
+        # and are bit-identical with and without the filter
+        self.top_k, self.top_p = int(top_k), float(top_p)
         self.key = jax.random.PRNGKey(seed)
 
         ps = page_aligned_size(paging.page_size, cfg)
@@ -268,6 +274,28 @@ class Engine:
             self.prefix_cache = PrefixCache(self.pool)
             self.pool.reclaimer = self.prefix_cache
 
+        # self-speculative decode (DESIGN.md §10): a host-side
+        # prompt-lookup drafter proposes up to spec_k tokens per slot and
+        # a batched verify step scores the whole panel through the chunk
+        # kernels, amortising decode's per-step weight stream over every
+        # accepted token. Panel widths pad up the documented spec ladder
+        # so the verify program compiles len(ladder) times, no more.
+        self.spec_k = paging.speculate_k
+        self.spec_ladder = spec_ladder(self.spec_k)
+        if self.spec_k:
+            if self.buckets is None:
+                raise ValueError(
+                    f"{cfg.name} carries recurrent/MoE prefill state: a "
+                    "verify panel cannot score draft tokens in one "
+                    "forward (speculation needs pure causal-attention "
+                    "KV, like chunked prefill)")
+            if self._twb:
+                raise ValueError(
+                    "speculate_k is mutually exclusive with "
+                    "table_width_bucketing: the decode width ladder "
+                    "would multiply the spec k-ladder in the compile "
+                    "bound — speculative steps ship full-width tables")
+
         # recurring jit operands are committed through the placement so
         # their sharding signature never flips host->mesh mid-run
         put = self.placement.put_rep
@@ -287,6 +315,7 @@ class Engine:
         self._prefill_lens: set = set()   # distinct padded lengths seen
         self._chunk_shapes: set = set()   # distinct chunk panel shapes
         self._step_widths: set = set()    # distinct decode table widths
+        self._spec_shapes: set = set()    # distinct verify panel widths
         self._stepped = False
         self.completed: List[Completion] = []
         self.kv_trace: List[List[int]] = []   # per-step live slot lengths
@@ -305,7 +334,11 @@ class Engine:
                       "prompt_tokens": 0, "cow_copies": 0,
                       "cow_in_place": 0, "share_deferrals": 0,
                       # token-budgeted chunk scheduling
-                      "budget_deferred_chunks": 0}
+                      "budget_deferred_chunks": 0,
+                      # self-speculative decoding (PR 10): steps that
+                      # carried drafts, tokens drafted, tokens accepted
+                      "spec_steps": 0, "spec_slot_steps": 0,
+                      "spec_drafted": 0, "spec_accepted": 0}
         self.page_trace: List[tuple] = []   # per-step (unique, mapped)
         self._share_deferred = False
         self.errors: List[str] = []  # reprs of recovered exceptions
@@ -314,6 +347,8 @@ class Engine:
         self._admit_seq = [0] * n_slots          # admission order (age)
         self._seq = 0
         self._head_blocked = 0       # consecutive iters the head waited
+
+        tk, tp = self.top_k, self.top_p    # static: closed over, one jit
 
         def step_fn(params, cache, tokens, lengths, tables, temps, active,
                     poison, key):
@@ -328,7 +363,8 @@ class Engine:
             logits = jnp.where(poison[:, None], jnp.nan, logits)
             bad = ~jnp.all(jnp.isfinite(logits), axis=-1)
             safe = jnp.where(bad[:, None], 0.0, logits)
-            nxt = sampling.sample(safe, key, temperature=temps)
+            nxt = sampling.sample(safe, key, temperature=temps,
+                                  top_k=tk, top_p=tp)
             # idle / mid-prefill slots stay parked at length 0 writing
             # their private scratch page
             new_lengths = jnp.where(active, lengths + 1, 0)
@@ -343,7 +379,8 @@ class Engine:
                                       page_size=ps)
             bad = ~jnp.all(jnp.isfinite(logits))
             safe = jnp.where(bad, 0.0, logits)
-            first = sampling.sample(safe, key, temperature=temp[None])[0]
+            first = sampling.sample(safe, key, temperature=temp[None],
+                                    top_k=tk, top_p=tp)[0]
             lengths = lengths.at[slot].set(plen)
             last = last.at[slot, 0].set(first)
             return first, bad, cache, lengths, last
@@ -367,7 +404,8 @@ class Engine:
             # final chunk's flag covers the whole chunked prefill
             bad = ~jnp.all(jnp.isfinite(logits))
             safe = jnp.where(bad, 0.0, logits)
-            tok = sampling.sample(safe, key, temperature=temp[None])[0]
+            tok = sampling.sample(safe, key, temperature=temp[None],
+                                  top_k=tk, top_p=tp)[0]
             # one program per chunk shape: every call samples and books
             # the slot's length, but the host only *fetches* the token
             # (and flips the slot active) on the final chunk — until
@@ -375,6 +413,83 @@ class Engine:
             lengths = lengths.at[slot].set(offset + chunk_len)
             last = last.at[slot, 0].set(tok)
             return tok, bad, cache, lengths, last
+
+        def spec_fn(params, cache, tokens, lengths, tables, temps, active,
+                    poison, draft_len, key):
+            # Speculative verify (DESIGN.md §10): `tokens` is a
+            # (B, 1 + k_pad) panel — the last committed token followed by
+            # each slot's padded draft. One chunk-style forward scores
+            # every position against the paged prefix WITHOUT writing
+            # pages; acceptance runs in the same jit and only the
+            # accepted prefix is inserted, so a rejected draft never
+            # touches the pool (exact for sliding-window rings, which a
+            # write-then-undo could not be).
+            b, sc = tokens.shape
+            kpad = sc - 1
+            # inactive slots score a width-1 panel at offset 0 (the
+            # scratch-page decode equivalent); a width-0 row would leave
+            # both attention partials fully masked
+            clen = jnp.where(active, 1 + draft_len, 1)
+            logits, states = lm.verify_states(
+                params, cache, tokens, rcfg, offset=lengths,
+                chunk_len=clen, pages=tables)
+            logits = jnp.where(poison[:, None, None], jnp.nan, logits)
+            rows = jnp.arange(sc)[None, :]
+            finite = jnp.all(jnp.isfinite(logits), axis=-1)
+            bad = ~jnp.all(finite | (rows >= clen[:, None]), axis=-1)
+            safe = jnp.where(bad[:, None, None], 0.0, logits)
+            t = jnp.broadcast_to(jnp.asarray(temps, safe.dtype), (b,))
+            greedy_row = t < sampling.GREEDY_EPS
+            # the exact distribution decode would sample position i from
+            filt = sampling.filter_logits(
+                safe / jnp.maximum(t, sampling.GREEDY_EPS)[:, None, None],
+                top_k=tk, top_p=tp)
+            probs = jax.nn.softmax(filt, axis=-1)
+            draft = tokens[:, 1:]
+            p_draft = jnp.take_along_axis(
+                probs[:, :kpad], draft[..., None], axis=-1)[..., 0]
+            akey, skey = jax.random.split(key)
+            u = jax.random.uniform(akey, (b, kpad))
+            amax = jnp.argmax(safe, axis=-1).astype(jnp.int32)
+            # standard rejection rule with a deterministic drafter
+            # (q = 1 on the proposed token): accept d_i with prob
+            # p_i(d_i); greedy rows accept exactly the argmax chain.
+            # n_acc = longest accepted prefix (cumprod-sum).
+            acc = jnp.where(greedy_row[:, None],
+                            draft == amax[:, :kpad], u < p_draft)
+            acc &= jnp.arange(kpad)[None, :] < draft_len[:, None]
+            n_acc = jnp.sum(jnp.cumprod(acc.astype(jnp.int32), axis=1),
+                            axis=1)
+            # the step's own emitted token comes from position n_acc: on
+            # rejection the drafted token is masked out and the leftover
+            # mass renormalised (with the acceptance test this keeps
+            # decode's distribution exact); on a full accept it is the
+            # bonus token scored for free by the panel's last row
+            idx = n_acc[:, None, None]
+            v = safe.shape[-1]
+            raw_at = jnp.take_along_axis(
+                safe, jnp.broadcast_to(idx, (b, 1, v)), axis=1)[:, 0]
+            f_at = jnp.take_along_axis(
+                filt, jnp.broadcast_to(idx, (b, 1, v)), axis=1)[:, 0]
+            rej = n_acc < draft_len
+            d_rej = jnp.take_along_axis(
+                draft, jnp.minimum(n_acc, kpad - 1)[:, None],
+                axis=1)[:, 0]
+            masked = (rej & ~greedy_row)[:, None] \
+                & (jnp.arange(v)[None, :] == d_rej[:, None])
+            f_at = jnp.where(masked, -jnp.inf, f_at)
+            toks = jax.random.categorical(skey, f_at,
+                                          axis=-1).astype(jnp.int32)
+            nxt = jnp.where(greedy_row,
+                            jnp.argmax(raw_at, axis=-1).astype(jnp.int32),
+                            toks)
+            # write ONLY the committed token plus the accepted prefix
+            n_keep = jnp.where(active, 1 + n_acc, 0)
+            cache = lm.insert_verify(rcfg, cache, states, pages=tables,
+                                     offset=lengths, n_keep=n_keep)
+            n_acc = jnp.where(active, n_acc, 0).astype(jnp.int32)
+            new_lengths = jnp.where(active, lengths + 1 + n_acc, 0)
+            return nxt, n_acc, bad, new_lengths, cache
 
         # donate the cache: the pool update aliases in place instead of
         # copying the whole (R, n_pages + n_slots, ps, Hkv, hd) pools
@@ -389,6 +504,11 @@ class Engine:
         self._chunk = self.placement.jit(
             chunk_fn, kinds=(PARAMS, CACHE) + (REP,) * 11,
             out_kinds=(REP, REP, CACHE, REP, REP), donate=(1,))
+        # verify shards exactly like chunk prefill: replicated panel in,
+        # head-sharded pool gather/insert, replicated tokens/counts out
+        self._spec = self.placement.jit(
+            spec_fn, kinds=(PARAMS, CACHE) + (REP,) * 8,
+            out_kinds=(REP, REP, REP, REP, CACHE), donate=(1,))
 
     # ------------------------------------------------------------------
 
@@ -419,19 +539,25 @@ class Engine:
         self.queue.append(_Pending(req=req, t0=time.perf_counter()))
 
     def compile_counts(self) -> dict:
-        """Compiled-program counts of the three serving entry points —
-        jax's jit cache size when available (ground truth), else the
-        host-side proxy (distinct padded prefill lengths / chunk panel
-        shapes / decode table widths map 1:1 to compiled programs)."""
+        """Compiled-program counts of the serving entry points — jax's
+        jit cache size when available (ground truth), else the host-side
+        proxy (distinct padded prefill lengths / chunk panel shapes /
+        decode table widths / verify panel widths map 1:1 to compiled
+        programs). The ``spec`` entry appears only when speculation is
+        configured — a spec-free engine keeps the PR 3 three-key shape
+        its consumers already compare against."""
         def n(fn, fallback):
             return fn._cache_size() if hasattr(fn, "_cache_size") \
                 else fallback
-        return {"prefill": n(self._admit, len(self._prefill_lens)),
-                "chunk": n(self._chunk, len(self._chunk_shapes)),
-                "step": n(self._step, len(self._step_widths))}
+        counts = {"prefill": n(self._admit, len(self._prefill_lens)),
+                  "chunk": n(self._chunk, len(self._chunk_shapes)),
+                  "step": n(self._step, len(self._step_widths))}
+        if self.spec_k:
+            counts["spec"] = n(self._spec, len(self._spec_shapes))
+        return counts
 
     def audit_entry_points(self):
-        """The three jitted entry points with representative arguments,
+        """The jitted entry points with representative arguments,
         shaped exactly as the run loop passes them — for the static
         auditor (repro.analysis), which lowers and traces these without
         executing anything. Each entry is ``(name, fn, args,
@@ -461,6 +587,15 @@ class Engine:
                   self.lengths, self._last,
                   jnp.float32(self.temperature), key,
                   jnp.int32(0), jnp.int32(0)), (1,)))
+        if self.spec_k:
+            w = 1 + self.spec_ladder[0]
+            entries.append(
+                ("spec", self._spec,
+                 (self.params, self.cache,
+                  jnp.zeros((self.n_slots, w), jnp.int32), self.lengths,
+                  self._tables_dev, self._temps, jnp.asarray(off),
+                  jnp.asarray(off),
+                  jnp.zeros((self.n_slots,), jnp.int32), key), (1,)))
         return entries
 
     def _req_temp(self, req: Request) -> float:
@@ -486,7 +621,10 @@ class Engine:
             ttft_s=ttft if ttft else (pend.ttft or 0.0),
             queue_s=(pend.admit_t - pend.t0
                      if pend.admit_t is not None else now - pend.t0),
-            itl_s=itl if itl is not None else [], status=status))
+            itl_s=itl if itl is not None else
+            [b - a for a, b in zip(pend.prior_times,
+                                   pend.prior_times[1:])],
+            status=status))
 
     def cancel(self, rid: int) -> bool:
         """Cancel a request wherever it is (queued, mid-prefill, or
@@ -951,6 +1089,56 @@ class Engine:
         self._token_times[slot] = []
         self._host_len[slot] = 0
 
+    # -- speculation ----------------------------------------------------
+
+    def _draft_budget(self, slot: int) -> int:
+        """Max draft length worth proposing for a slot: the engine k-cap,
+        the request's remaining ``max_new`` budget (a fully accepted
+        draft emits k+1 tokens this step) and the KV cap (the verify
+        step writes up to 1+k rows, and the ``max_len`` length
+        retirement must keep firing on the final row exactly as plain
+        decode would)."""
+        pend = self.active[slot]
+        return min(self.spec_k,
+                   pend.req.max_new - len(self.out_tokens[slot]) - 1,
+                   self.max_len - int(self._host_len[slot]) - 2)
+
+    def _build_drafts(self, active):
+        """Host side of a speculative step: run the prompt-lookup
+        drafter per active slot and pack the (B, 1 + k_pad) verify
+        panel — row 0 is the slot's last committed token (the host
+        mirror of ``_last``), then its draft, padded up the documented
+        spec ladder; true per-slot lengths travel in the traced
+        ``draft_len`` operand. Returns ``(panel, draft_len)`` numpy
+        arrays, or None when nothing drafted (plain decode step)."""
+        if not self.spec_k:
+            return None
+        props = {}
+        for slot in np.flatnonzero(active):
+            slot = int(slot)
+            k = self._draft_budget(slot)
+            if k <= 0:
+                continue
+            pend = self.active[slot]
+            hist = np.concatenate(
+                [np.asarray(pend.req.prompt, np.int32),
+                 np.asarray(self.out_tokens[slot], np.int32)])
+            d = spec.propose(hist, k)
+            if d.size:
+                props[slot] = d
+        if not props:
+            return None
+        kpad = bucket_for(max(len(d) for d in props.values()),
+                          self.spec_ladder)
+        panel = np.zeros((self.n_slots, 1 + kpad), np.int32)
+        dlen = np.zeros((self.n_slots,), np.int32)
+        for slot in np.flatnonzero(active):
+            panel[int(slot), 0] = self.out_tokens[int(slot)][-1]
+        for slot, d in props.items():
+            panel[slot, 1:1 + len(d)] = d
+            dlen[slot] = len(d)
+        return panel, dlen
+
     # -- device mirrors -------------------------------------------------
 
     def _table_width(self) -> int:
@@ -1093,29 +1281,35 @@ class Engine:
                     if self.queue or self.chunking:
                         continue     # blocked or mid-prefill: next tick
                     break            # everything admitted retired at once
+                drafts = self._build_drafts(active)
+                dlen = (drafts[1] if drafts is not None
+                        else np.zeros((self.n_slots,), np.int32))
+                # rows this step may write: the decode position, plus —
+                # speculating — the slot's full draft tail (rejected
+                # tail pages roll back after the accepted counts land)
+                need = {int(s): int(self._host_len[s]) + 1 + int(dlen[s])
+                        for s in np.flatnonzero(active)}
                 self._make_room(sum(
-                    max(0, self.pool._pages_for(
-                        int(self._host_len[s]) + 1)
+                    max(0, self.pool._pages_for(n)
                         - int(self.pool.n_alloc[s]))
-                    for s in np.flatnonzero(active)))
+                    for s, n in need.items()))
                 self.pool.begin()
                 try:
-                    for slot in np.flatnonzero(active):
-                        # cover the position this step writes (lazy tail)
-                        self.pool.ensure(int(slot),
-                                         int(self._host_len[slot]) + 1)
+                    for s, n in need.items():
+                        self.pool.ensure(s, n)      # lazy tail draws
                 except AllocFault:
                     self.pool.rollback()
                     self.stats["alloc_faults"] += 1
                     continue         # whole step retries next iteration
                 self.pool.commit()
                 if self.prefix_cache is not None:
-                    for s in np.flatnonzero(active):
-                        pg = int(self.pool.tables[
-                            int(s),
-                            int(self._host_len[s]) // self.page_size])
-                        assert self.pool.refs[pg] == 1, (
-                            f"decode write aimed at shared page {pg}")
+                    for s, n in need.items():
+                        for lp in range(
+                                int(self._host_len[s]) // self.page_size,
+                                (n - 1) // self.page_size + 1):
+                            pg = int(self.pool.tables[s, lp])
+                            assert self.pool.refs[pg] == 1, (
+                                f"decode write aimed at shared page {pg}")
                 self._ship_tables()
                 poison = np.zeros((self.n_slots,), bool)
                 pslots = self.faults.poison_slots(clock)
@@ -1129,18 +1323,40 @@ class Engine:
                     raise StepFault(
                         f"injected step exception @clock {clock}")
                 self.key, sk = jax.random.split(self.key)
-                nxt, bad, self.lengths, self.cache = self._step(
-                    self.params, self.cache, self._last, self.lengths,
-                    self._tables_dev, self._temps, jnp.asarray(active),
-                    jnp.asarray(poison), sk)
+                if drafts is not None:
+                    self._spec_shapes.add(int(drafts[0].shape[1]))
+                    nxt, n_acc, bad, self.lengths, self.cache = \
+                        self._spec(
+                            self.params, self.cache,
+                            jnp.asarray(drafts[0]), self.lengths,
+                            self._tables_dev, self._temps,
+                            jnp.asarray(active), jnp.asarray(poison),
+                            jnp.asarray(dlen), sk)
+                    fetch = (nxt, bad, n_acc)
+                else:
+                    nxt, bad, self.lengths, self.cache = self._step(
+                        self.params, self.cache, self._last,
+                        self.lengths, self._tables_dev, self._temps,
+                        jnp.asarray(active), jnp.asarray(poison), sk)
+                    self._step_widths.add(int(self._tables_dev.shape[1]))
+                    fetch = (nxt, bad)
                 self._last = nxt[:, None]
                 self._stepped = True
-                self._step_widths.add(int(self._tables_dev.shape[1]))
-                # the step's ONE device fetch (tokens + NaN flags travel
-                # in the same transfer)
-                nxt_host, bad_host = jax.device_get((nxt, bad))
+                # the step's ONE device fetch (tokens + NaN flags — and,
+                # on a speculative step, per-slot accepted counts — in
+                # one transfer)
+                got = jax.device_get(fetch)
+                nxt_host, bad_host = got[0], got[1]
+                acc_host = (np.asarray(got[2], np.int64) if len(got) > 2
+                            else np.zeros((self.n_slots,), np.int64))
                 now = time.perf_counter()
-                self._host_len[active] += 1
+                if drafts is not None:
+                    self.stats["spec_steps"] += 1
+                    self.stats["spec_slot_steps"] += int(active.sum())
+                    self.stats["spec_drafted"] += int(dlen[active].sum())
+                    self.stats["spec_accepted"] += int(
+                        acc_host[active].sum())
+                self._host_len[active] += 1 + acc_host[active]
                 self._host_len[~active] = 0
                 self.kv_trace.append(
                     [int(self._host_len[s])
@@ -1154,15 +1370,32 @@ class Engine:
                         self.stats["nan_quarantined"] += 1
                         self._retire(slot, "failed")
                         continue
-                    tok = int(nxt_host[slot])
-                    self.out_tokens[slot].append(tok)
-                    self._token_times[slot].append(now)
-                    if tok == self.eos_id:
-                        self._retire(slot, "eos")
-                    elif len(self.out_tokens[slot]) >= pend.req.max_new:
-                        self._retire(slot, "ok")
-                    elif int(self._host_len[slot]) >= self.max_len - 1:
+                    emitted = [int(nxt_host[slot])]
+                    if drafts is not None:
+                        # accepted draft prefix first, then the verify
+                        # step's own replacement/bonus token
+                        emitted = [int(t) for t in drafts[0][
+                            slot, 1:1 + int(acc_host[slot])]] + emitted
+                    for tok in emitted:
+                        self.out_tokens[slot].append(tok)
+                        self._token_times[slot].append(now)
+                        if tok == self.eos_id:
+                            self._retire(slot, "eos")
+                            break
+                        if len(self.out_tokens[slot]) >= \
+                                pend.req.max_new:
+                            self._retire(slot, "ok")
+                            break
+                    if self.active[slot] is None:
+                        continue     # retired mid-emission: pages freed
+                    if int(self._host_len[slot]) >= self.max_len - 1:
                         self._retire(slot, "length")
+                    elif drafts is not None:
+                        # return the rejected draft tail's pages; the
+                        # reservation survives (rollback_tail is legal
+                        # outside a pool transaction)
+                        self.pool.rollback_tail(
+                            slot, int(self._host_len[slot]))
             except Exception as err:
                 # recovery boundary: injected StepFault or a real device
                 # error mid-step — the donated cache is presumed lost.

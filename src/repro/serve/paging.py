@@ -86,6 +86,19 @@ def chunk_schedule(plen: int, chunk_size: int,
     return out
 
 
+def spec_ladder(k_max: int) -> List[int]:
+    """Documented draft-width ladder for speculative decode: power-of-two
+    widths 1, 2, ..., 2^ceil(log2(k_max)). A speculative step pads its
+    widest per-slot draft up to the next ladder entry (true per-slot
+    lengths travel in a traced ``draft_len`` operand), so the verify
+    program compiles once per ladder entry — the compile bound grows by
+    ``len(spec_ladder(k))`` and by nothing else (enforced by the
+    ``compile_bound`` auditor pass)."""
+    if k_max <= 0:
+        return []
+    return [1 << i for i in range((k_max - 1).bit_length() + 1)]
+
+
 def supports_bucketing(cfg: ModelConfig) -> bool:
     """Tail-padding a prompt is exact only when every position's state
     is causal-attention KV: recurrent mixers (mamba/rwkv) fold the pad

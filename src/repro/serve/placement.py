@@ -30,7 +30,11 @@ count):
   * an untied ``lm_head`` vocab-shards (exact N-split) and the logits
     all-gather back; tied embeddings stay replicated;
   * block tables, lengths, temperatures, tokens and the ``PagePool``
-    free list stay host-side / replicated — the host loop is oblivious.
+    free list stay host-side / replicated — the host loop is oblivious;
+  * the speculative *verify* entry point shards exactly like chunk
+    prefill: a replicated ``(B, 1+k)`` token panel in, head-sharded
+    paged writes, all-gathered panel logits out. No new placement code
+    — ``Placement.jit`` sees one more (PARAMS, CACHE, REP...) program.
 
 Weight-only int8 ``{"q", "s"}`` leaves shard with their weight: scales
 are per-output-channel, so column-sharded panels permute / split the

@@ -4,9 +4,41 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+# Rows with temperature below this decode greedily. The per-row path
+# clamps the softmax denominator to the same constant, so the greedy
+# fallback must trigger at the same threshold — a row with
+# 0 < t < GREEDY_EPS would otherwise sample from the clamped
+# near-greedy softmax instead of decoding greedily (discontinuous at
+# the boundary, and distinct from the scalar path's behaviour).
+GREEDY_EPS = 1e-6
+
 
 def greedy(logits: jnp.ndarray) -> jnp.ndarray:
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def filter_logits(logits: jnp.ndarray, *, top_k: int = 0,
+                  top_p: float = 1.0) -> jnp.ndarray:
+    """Static top-k / nucleus filter over the last axis (any leading
+    dims); filtered entries go to -inf. Shared by :func:`sample` and
+    the speculative verify acceptance rule, which must score draft
+    tokens against exactly the distribution decode would sample from.
+    """
+    if top_k > 0:
+        # clamp to the vocab size: top_k >= V keeps every token (the
+        # unclamped static index -top_k was out of bounds and raised)
+        k = min(int(top_k), logits.shape[-1])
+        if k < logits.shape[-1]:
+            kth = jnp.sort(logits, axis=-1)[..., -k][..., None]
+            logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        cutoff_idx = jnp.sum(cum < top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return logits
 
 
 def sample(logits: jnp.ndarray, key, *, temperature=1.0,
@@ -16,14 +48,16 @@ def sample(logits: jnp.ndarray, key, *, temperature=1.0,
     ``temperature`` may be a python float or a per-row (B,) array —
     continuous batching mixes greedy and sampled requests in one
     lockstep step, and a traced temperature operand keeps that a single
-    compiled program. Rows with temperature <= 0 decode greedily.
+    compiled program. Rows with temperature < ``GREEDY_EPS`` decode
+    greedily (from the raw logits, so ``top_k``/``top_p`` never perturb
+    a greedy row).
     """
     if jnp.ndim(temperature) == 0 and not isinstance(temperature,
                                                      jax.core.Tracer):
         temperature = float(temperature)     # 0-d np/jnp scalars
     per_row = not isinstance(temperature, (int, float))
     if not per_row:
-        if temperature <= 0.0:
+        if temperature < GREEDY_EPS:
             return greedy(logits)
         logits = logits / temperature
     else:
@@ -32,22 +66,9 @@ def sample(logits: jnp.ndarray, key, *, temperature=1.0,
         t = jnp.broadcast_to(jnp.asarray(temperature, logits.dtype),
                              logits.shape[:1])
         raw = logits
-        logits = logits / jnp.maximum(t, 1e-6)[:, None]
-    if top_k > 0:
-        # clamp to the vocab size: top_k >= V keeps every token (the
-        # unclamped static index -top_k was out of bounds and raised)
-        k = min(int(top_k), logits.shape[-1])
-        if k < logits.shape[-1]:
-            kth = jnp.sort(logits, axis=-1)[:, -k][:, None]
-            logits = jnp.where(logits < kth, -jnp.inf, logits)
-    if top_p < 1.0:
-        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
-        probs = jax.nn.softmax(sorted_logits, axis=-1)
-        cum = jnp.cumsum(probs, axis=-1)
-        cutoff_idx = jnp.sum(cum < top_p, axis=-1, keepdims=True)
-        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
-        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+        logits = logits / jnp.maximum(t, GREEDY_EPS)[:, None]
+    logits = filter_logits(logits, top_k=top_k, top_p=top_p)
     toks = jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
     if per_row:
-        return jnp.where(t <= 0.0, greedy(raw), toks)
+        return jnp.where(t < GREEDY_EPS, greedy(raw), toks)
     return toks

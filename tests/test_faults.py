@@ -175,6 +175,14 @@ def _assert_drained(eng):
     assert len(eng.pool.free) == eng.pool.n_pages
     assert not eng.queue and not eng.chunking
     assert all(a is None for a in eng.active)
+    # ITL continuity (PR 10 bugfix): every completion's inter-token
+    # gaps pair its tokens — across preempt-resume, recovery replay and
+    # speculative multi-token steps alike. A resumed request used to
+    # lose its pre-preemption timestamps and report itl_s=[].
+    for c in eng.completed:
+        assert len(c.itl_s) == max(len(c.tokens) - 1, 0), \
+            (c.rid, c.status, len(c.itl_s), len(c.tokens))
+        assert all(g >= 0 for g in c.itl_s), (c.rid, c.status)
 
 
 @pytest.mark.slow

@@ -208,6 +208,61 @@ def test_page_pool_invariants(data):
     assert admitted == list(range(len(admitted)))
 
 
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_rollback_tail_page_boundaries(data):
+    """The speculative-step contract on ``rollback_tail`` (PR 10): a
+    verify step draws pages for ``host_len + 1 + draft_len`` tokens,
+    accepts some prefix ``n_acc ∈ {0..draft_len}``, and rolls the rest
+    back. For every acceptance count — page-exact fills included (the
+    off-by-one regime: ``keep`` landing exactly on a page boundary) —
+    the rollback must never free a page holding accepted tokens, never
+    leak a page holding only rejected ones, keep the accepted page
+    prefix bit-identical, and leave the reservation untouched so the
+    slot's worst case still fits."""
+    page_size = data.draw(st.sampled_from([4, 8]), label="page_size")
+    max_pages = data.draw(st.integers(2, 6), label="max_pages")
+    max_len = page_size * max_pages
+    pool = PagePool(max_pages, page_size, 1, max_pages)
+    pool.admit(0, max_len)
+    host_len = data.draw(st.integers(1, max_len - 2), label="host_len")
+    if data.draw(st.booleans(), label="snap_host_to_page"):
+        # exercise the boundary: committed tokens exactly fill pages
+        host_len = max(page_size, (host_len // page_size) * page_size)
+    draft_len = data.draw(
+        st.integers(0, min(8, max_len - host_len - 2)), label="draft_len")
+    pool.ensure(0, host_len)
+    committed = [int(p) for p in pool.tables[0, :pool.n_alloc[0]]]
+    pool.ensure(0, host_len + 1 + draft_len)    # the spec step's draws
+    drawn = [int(p) for p in pool.tables[0, :pool.n_alloc[0]]]
+    assert drawn[:len(committed)] == committed
+
+    n_acc = data.draw(st.integers(0, draft_len), label="n_acc")
+    keep = host_len + 1 + n_acc
+    n_keep_pages = pool._pages_for(keep)
+    accepted_pages = drawn[:n_keep_pages]
+    freed = pool.rollback_tail(0, keep)
+
+    # never leak a rejected-only page: allocation shrinks to exactly
+    # the accepted footprint, and every freed page is back on the list
+    assert int(pool.n_alloc[0]) == n_keep_pages
+    assert freed == len(drawn) - n_keep_pages
+    assert set(drawn[n_keep_pages:]) <= set(pool.free)
+    # never free an accepted page: the kept prefix is bit-identical
+    # and disjoint from the free list
+    assert [int(p) for p in pool.tables[0, :n_keep_pages]] \
+        == accepted_pages
+    assert set(accepted_pages).isdisjoint(pool.free)
+    # the reservation survives — the sequence's worst case is unchanged
+    assert int(pool.reserved[0]) == pool._pages_for(max_len)
+    pool.check_conservation()
+    # a second, deeper rollback (retire-style) composes cleanly
+    freed2 = pool.rollback_tail(0, host_len)
+    assert int(pool.n_alloc[0]) == pool._pages_for(host_len)
+    assert freed2 == n_keep_pages - pool._pages_for(host_len)
+    pool.check_conservation()
+
+
 @settings(max_examples=40, deadline=None)
 @given(st.data())
 def test_page_pool_refcount_invariants(data):

@@ -1,0 +1,281 @@
+"""Self-speculative decoding (PR 10): drafter units, k-ladder, exact
+greedy parity through the paged verify path, and the sampling-boundary
+bugfix sweep.
+
+Fast section — the prompt-lookup drafter and ``spec_ladder`` (pure
+host numpy, no model), plus the ``filter_logits`` / temperature-
+boundary regressions. Slow section — engine-level parity: greedy
+streams must be bit-identical spec-on vs spec-off on the dense-oracle
+archs (global attention AND sliding-window rings, where a sloppy
+verify would clobber ring rows with rejected drafts), across
+preempt-resume, with the verify compile count held to the documented
+ladder.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import manual_greedy
+
+from repro.configs import REDUCED
+from repro.core.types import PagingConfig
+from repro.models import lm
+from repro.serve import sampling, spec
+from repro.serve.engine import Engine, Request
+from repro.serve.paging import bucket_for, spec_ladder
+
+# ----------------------------------------------------------------------
+# drafter + ladder units (fast)
+# ----------------------------------------------------------------------
+
+
+def test_propose_prefers_longest_ngram():
+    # tail [7, 8] matches at position 2 (n=2); tail [8] alone also
+    # matches at 3 — the longer context must win
+    hist = np.asarray([1, 7, 8, 9, 5, 7, 8], np.int32)
+    out = spec.propose(hist, 3)
+    assert out.tolist() == [9, 5, 7]
+
+
+def test_propose_most_recent_match_wins():
+    # tail [3] matches at positions 0 and 2; the drafter must copy the
+    # continuation of the LATEST occurrence (local context beats stale)
+    hist = np.asarray([3, 4, 3, 6, 3], np.int32)
+    out = spec.propose(hist, 2)
+    assert out.tolist() == [6, 3]
+
+
+def test_propose_truncates_at_history_end_and_k():
+    hist = np.asarray([5, 6, 5, 6, 5], np.int32)
+    assert spec.propose(hist, 8).tolist() == [6, 5]   # runs off the end
+    assert spec.propose(hist, 1).tolist() == [6]      # k caps it
+
+
+def test_propose_no_match_and_degenerate_inputs():
+    assert spec.propose(np.asarray([1, 2, 3, 4], np.int32), 4).size == 0
+    assert spec.propose(np.asarray([9], np.int32), 4).size == 0
+    assert spec.propose(np.asarray([], np.int32), 4).size == 0
+    assert spec.propose(np.asarray([1, 1, 2], np.int32), 0).size == 0
+
+
+def test_propose_repetitive_loop_fills_k():
+    phrase = np.asarray([11, 12, 13, 14], np.int32)
+    hist = np.tile(phrase, 4)
+    out = spec.propose(hist, 4)
+    # the loop continues exactly: after ...13, 14 comes 11, 12, 13, 14
+    assert out.tolist() == [11, 12, 13, 14]
+
+
+def test_spec_ladder_is_pow2_and_covers_k():
+    assert spec_ladder(0) == []
+    assert spec_ladder(1) == [1]
+    assert spec_ladder(4) == [1, 2, 4]
+    assert spec_ladder(5) == [1, 2, 4, 8]
+    for k in range(1, 33):
+        ladder = spec_ladder(k)
+        assert ladder[-1] >= k
+        assert all(b == 1 << i for i, b in enumerate(ladder))
+        # every reachable draft length buckets into the ladder
+        for d in range(1, k + 1):
+            assert bucket_for(d, ladder) in ladder
+
+
+# ----------------------------------------------------------------------
+# sampling-boundary regressions (fast)
+# ----------------------------------------------------------------------
+
+
+def test_temperature_boundary_matches_greedy():
+    """Regression (PR 10 bugfix): at t=1e-7 — below GREEDY_EPS but
+    nonzero — the fallback threshold and the divide clamp used to
+    disagree, so a row could divide by a denormal-scale temperature
+    (inf/NaN logits) yet miss the greedy fallback. Any t below the eps
+    must be exact greedy."""
+    key = jax.random.PRNGKey(0)
+    logits = jnp.asarray([[0.3, 5.0, 1.0, -2.0],
+                          [2.0, -1.0, 0.5, 1.9]])
+    want = sampling.greedy(logits)
+    for t in (0.0, 1e-30, 1e-7, sampling.GREEDY_EPS / 2):
+        got = sampling.sample(logits, key, temperature=t)
+        assert jnp.array_equal(got, want), t
+        assert bool(jnp.all(jnp.isfinite(
+            logits / jnp.maximum(jnp.asarray(t), sampling.GREEDY_EPS))))
+    # per-row mixing: a greedy row rides along with a hot sampled row
+    temps = jnp.asarray([1e-7, 1.0])
+    got = sampling.sample(logits, key, temperature=temps)
+    assert int(got[0]) == int(want[0])
+
+
+def test_filter_logits_on_panel_shapes():
+    """filter_logits must accept the verify path's (B, S, V) panels,
+    not just (B, V) rows, and filter each row independently."""
+    key = jax.random.PRNGKey(1)
+    panel = jax.random.normal(key, (2, 3, 8))
+    out = sampling.filter_logits(panel, top_k=2, top_p=1.0)
+    assert out.shape == panel.shape
+    kept = jnp.isfinite(out).sum(axis=-1)
+    assert bool(jnp.all(kept == 2))
+    flat = sampling.filter_logits(panel.reshape(6, 8), top_k=2,
+                                  top_p=1.0)
+    assert jnp.array_equal(out.reshape(6, 8), flat)
+
+
+# ----------------------------------------------------------------------
+# engine parity (slow)
+# ----------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = REDUCED["deepseek-7b"]()
+    params, _ = lm.init_lm(jax.random.PRNGKey(0), cfg,
+                           dtype=jnp.float32)
+    return params, cfg
+
+
+def _prompts(cfg, plens, seed=0, repetitive=False):
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for i, p in enumerate(plens):
+        if repetitive:
+            phrase = np.asarray(jax.random.randint(
+                jax.random.fold_in(key, i), (3,), 0, cfg.vocab))
+            out.append(jnp.asarray(np.tile(phrase, -(-p // 3))[:p]))
+        else:
+            out.append(jax.random.randint(jax.random.fold_in(key, i),
+                                          (p,), 0, cfg.vocab))
+    return out
+
+
+def _drive(params, cfg, prompts, k, n_new, *, max_len=48, n_pages=0,
+           patience=None, temperature=0.0, seed=0):
+    eng = Engine(params, cfg, n_slots=2, max_len=max_len, eos_id=-1,
+                 temperature=temperature, seed=seed,
+                 paging=PagingConfig(page_size=8, n_pages=n_pages,
+                                     speculate_k=k),
+                 preempt_patience=patience)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new=n_new))
+    done = eng.run()
+    eng.pool.check_conservation()
+    assert len(eng.pool.free) == eng.pool.n_pages
+    for c in done:
+        assert len(c.itl_s) == max(len(c.tokens) - 1, 0), c.rid
+    return eng, {c.rid: c for c in done}
+
+
+@pytest.mark.slow
+def test_spec_greedy_parity_vs_oracle(small_lm):
+    """Greedy streams spec-on == spec-off == the dense-cache oracle, on
+    repetitive prompts (drafts accept) AND incompressible ones (every
+    draft rejects — the rollback path runs constantly)."""
+    params, cfg = small_lm
+    n_new = 8
+    for repetitive in (False, True):
+        prompts = _prompts(cfg, [7, 10, 13], seed=2,
+                           repetitive=repetitive)
+        eng_on, on = _drive(params, cfg, prompts, 4, n_new)
+        _, off = _drive(params, cfg, prompts, 0, n_new)
+        for rid, p in enumerate(prompts):
+            want = manual_greedy(params, cfg, p, n_new, 48)
+            assert off[rid].tokens == want, (repetitive, rid)
+            assert on[rid].tokens == want, (repetitive, rid)
+        if repetitive:
+            assert eng_on.stats["spec_accepted"] > 0
+        # the verify programs stay within the documented k-ladder
+        assert eng_on.compile_counts()["spec"] <= len(spec_ladder(4))
+
+
+@pytest.mark.slow
+def test_spec_parity_sliding_window(small_lm):
+    """Sliding-window rings are where a sloppy verify corrupts state:
+    a rejected draft row written into the ring would overwrite a live
+    token slot (ring position = pos % window). Greedy parity spec-on
+    vs off on the gemma3-style local-attention arch proves rejected
+    rows never land."""
+    del small_lm
+    cfg = REDUCED["gemma3-27b"]()
+    params, _ = lm.init_lm(jax.random.PRNGKey(3), cfg,
+                           dtype=jnp.float32)
+    # decode far enough past local_window=16 to wrap the ring
+    prompts = _prompts(cfg, [6, 9], seed=4, repetitive=True)
+    _, on = _drive(params, cfg, prompts, 4, 24, max_len=64)
+    _, off = _drive(params, cfg, prompts, 0, 24, max_len=64)
+    for rid in off:
+        assert on[rid].tokens == off[rid].tokens, rid
+
+
+@pytest.mark.slow
+def test_spec_parity_across_preempt_resume(small_lm):
+    """A starved pool forces preemption mid-speculation: the victim's
+    pages (draft tails included) roll back, it resumes through prefill,
+    and the final streams still match spec-off exactly."""
+    params, cfg = small_lm
+    prompts = _prompts(cfg, [9, 10, 11], seed=5, repetitive=True)
+    n_new = 8
+    # 6 pages of 8 hold two of three residents (worst ~3 pages each)
+    eng_on, on = _drive(params, cfg, prompts, 4, n_new, max_len=32,
+                        n_pages=6, patience=2)
+    eng_off, off = _drive(params, cfg, prompts, 0, n_new, max_len=32,
+                          n_pages=6, patience=2)
+    assert eng_on.stats["preemptions"] >= 1
+    for rid in off:
+        assert on[rid].status == off[rid].status == "ok"
+        assert on[rid].tokens == off[rid].tokens, rid
+        want = manual_greedy(params, cfg, prompts[rid], n_new, 32)
+        assert on[rid].tokens == want, rid
+
+
+@pytest.mark.slow
+def test_spec_respects_max_new_and_max_len(small_lm):
+    """Budget caps: a fully accepted draft never emits past max_new,
+    and the length retirement fires at the same token count as plain
+    decode (the last allowed row is the only one that can reach
+    max_len - 1)."""
+    params, cfg = small_lm
+    prompts = _prompts(cfg, [12], seed=6, repetitive=True)
+    for n_new, max_len in ((3, 48), (8, 18)):
+        _, on = _drive(params, cfg, prompts, 4, n_new, max_len=max_len)
+        _, off = _drive(params, cfg, prompts, 0, n_new, max_len=max_len)
+        assert on[0].tokens == off[0].tokens
+        assert on[0].status == off[0].status
+        assert len(on[0].tokens) <= n_new
+
+
+@pytest.mark.slow
+def test_top_k_top_p_plumbing(small_lm):
+    """Engine-level top_k/top_p: greedy rows stay bit-identical
+    whatever the filter (the static filter applies only to sampled
+    rows), and sampled rows with a tight filter stay inside the kept
+    set. One engine => one decode program regardless of the knobs."""
+    params, cfg = small_lm
+    prompts = _prompts(cfg, [7, 9], seed=7)
+    n_new = 6
+    _, plain = _drive(params, cfg, prompts, 0, n_new)
+    eng = Engine(params, cfg, n_slots=2, max_len=48, eos_id=-1,
+                 temperature=0.0, top_k=3, top_p=0.9,
+                 paging=PagingConfig(page_size=8))
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new=n_new))
+    got = {c.rid: c for c in eng.run()}
+    for rid in plain:     # greedy rows ignore the filter bit-exactly
+        assert got[rid].tokens == plain[rid].tokens, rid
+    assert eng.compile_counts()["step"] == 1
+
+
+def test_spec_config_rejections(small_lm):
+    """speculate_k needs a bucketing-capable arch (the verify panel is
+    a chunk shape) and full-width tables (a width ladder would multiply
+    the verify k-ladder against it — the exact compile-bound blowup the
+    PR 9 auditor exists to catch)."""
+    params, cfg = small_lm
+    with pytest.raises(ValueError, match="table_width_bucketing"):
+        Engine(params, cfg, n_slots=2, max_len=48, eos_id=-1,
+               paging=PagingConfig(page_size=8, speculate_k=2,
+                                   table_width_bucketing=True))
+    rcfg = REDUCED["rwkv6-3b"]()
+    rparams, _ = lm.init_lm(jax.random.PRNGKey(0), rcfg,
+                            dtype=jnp.float32)
+    with pytest.raises(ValueError, match="speculat"):
+        Engine(rparams, rcfg, n_slots=2, max_len=48, eos_id=-1,
+               paging=PagingConfig(page_size=8, speculate_k=2))
